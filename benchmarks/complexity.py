@@ -1,0 +1,81 @@
+"""Paper Fig. 14: MCOP running time vs number of tasks.
+
+Measures wall time of the reference MCOP over growing |V| on the paper's
+topology families, fits the theoretical O(|V|²log|V| + |V|·|E|) curve, and
+contrasts the growth against the exponential branch-and-bound ("LP
+solver") comparator of §5.4 — which must be cut off after a small |V|.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import branch_and_bound, linear_graph, mcop_reference, random_wcg, tree_graph
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[dict]:
+    rows: list[dict] = []
+    sizes = [10, 20, 40, 80, 160, 320]
+    times, theos = [], []
+    for n in sizes:
+        g = random_wcg(n, edge_prob=0.15, rng=np.random.default_rng(n))
+        dt = _time(mcop_reference, g)
+        e = g.num_edges
+        theo = n * n * np.log(max(n, 2)) + n * e
+        times.append(dt)
+        theos.append(theo)
+        rows.append(
+            {
+                "name": f"complexity/mcop_n{n}",
+                "us_per_call": dt * 1e6,
+                "derived": f"edges={e}",
+            }
+        )
+    # fit quality: correlation of measured vs theoretical in log space
+    corr = float(np.corrcoef(np.log(times), np.log(theos))[0, 1])
+    rows.append(
+        {
+            "name": "complexity/theory_fit_corr",
+            "us_per_call": 0.0,
+            "derived": f"log-log corr={corr:.4f} (paper: 'good match')",
+        }
+    )
+
+    # branch and bound blows up: time it on small graphs only
+    for n in (8, 12, 16, 20):
+        g = random_wcg(n, edge_prob=0.3, rng=np.random.default_rng(1000 + n))
+        t0 = time.perf_counter()
+        res = branch_and_bound(g, node_limit=2_000_000)
+        dt = time.perf_counter() - t0
+        rows.append(
+            {
+                "name": f"complexity/bnb_n{n}",
+                "us_per_call": dt * 1e6,
+                "derived": f"nodes_expanded={res.nodes_expanded}",
+            }
+        )
+    # headline ratio at n=20
+    g = random_wcg(20, edge_prob=0.3, rng=np.random.default_rng(1020))
+    t_mcop = _time(mcop_reference, g)
+    t0 = time.perf_counter()
+    branch_and_bound(g, node_limit=2_000_000)
+    t_bnb = time.perf_counter() - t0
+    rows.append(
+        {
+            "name": "complexity/mcop_vs_bnb_speedup_n20",
+            "us_per_call": t_mcop * 1e6,
+            "derived": f"bnb/mcop={t_bnb / max(t_mcop, 1e-12):.1f}x",
+        }
+    )
+    return rows

@@ -1,0 +1,140 @@
+"""Paper Figs. 17–19: scheme comparison and offloading gains vs environment.
+
+Reproduces, with the paper's own constants (P_m=0.9 W, P_i=0.3 W,
+P_tr=1.3 W; F=3 for the bandwidth sweep; B=3 MB/s for the speedup sweep;
+ω=0.5), the three curves:
+
+  * response time / energy of no-offloading, full-offloading and partial
+    (MCOP) offloading vs wireless bandwidth (Fig. 17) and speedup (Fig. 18);
+  * offloading gains under the three cost models (Fig. 19).
+
+The application is the reconstructed face-recognition call tree (Fig. 12),
+the same app the paper partitions in §7.2.  Full sweep data lands in
+``results/gains.json`` for EXPERIMENTS.md; the CSV rows summarise the
+qualitative claims the paper makes about these figures, each asserted.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import (
+    AppProfile,
+    EnergyModel,
+    Environment,
+    ResponseTimeModel,
+    WeightedModel,
+    face_recognition_graph,
+    full_offloading,
+    mcop_reference,
+    no_offloading,
+    offloading_gain,
+)
+
+BANDWIDTHS = [0.1, 0.25, 0.5, 1.0, 2.0, 3.0, 5.0, 8.0, 16.0, 32.0]   # MB/s
+SPEEDUPS = [1.0, 1.5, 2.0, 3.0, 5.0, 8.0, 16.0, 32.0]
+
+
+def _profile() -> AppProfile:
+    g = face_recognition_graph(speedup=1.0, bandwidth_mbps=1.0)
+    return AppProfile.from_wcg_times(g, bandwidth=1.0)
+
+
+def _schemes(model, prof, env):
+    g = model.build(prof, env)
+    no = no_offloading(g).cost
+    full = full_offloading(g).cost
+    part = min(mcop_reference(g).min_cut, no)  # §4.3 beneficial-only clamp
+    return no, full, part
+
+
+def run() -> list[dict]:
+    prof = _profile()
+    rows: list[dict] = []
+    data = {"bandwidth_sweep": [], "speedup_sweep": [], "gain_sweep": []}
+
+    # ---- Fig. 17: vs bandwidth at F=3 --------------------------------
+    for bw in BANDWIDTHS:
+        env = Environment.symmetric(bandwidth=bw, speedup=3.0)
+        t_no, t_full, t_part = _schemes(ResponseTimeModel(), prof, env)
+        e_no, e_full, e_part = _schemes(EnergyModel(), prof, env)
+        data["bandwidth_sweep"].append(
+            dict(B=bw, t_no=t_no, t_full=t_full, t_part=t_part,
+                 e_no=e_no, e_full=e_full, e_part=e_part)
+        )
+    d = data["bandwidth_sweep"]
+    low, high = d[0], d[-1]
+    rows.append({
+        "name": "gains/fig17_low_bw_no_offloading_wins",
+        "us_per_call": 0.0,
+        "derived": f"ok={low['t_part'] >= low['t_no'] - 1e-9 and low['t_full'] > low['t_no']}",
+    })
+    rows.append({
+        "name": "gains/fig17_high_bw_full_approaches_partial",
+        "us_per_call": 0.0,
+        "derived": f"gap={(high['t_full'] - high['t_part']) / high['t_part']:.4f}",
+    })
+    rows.append({
+        "name": "gains/fig17_partial_never_worse",
+        "us_per_call": 0.0,
+        "derived": f"ok={all(r['t_part'] <= min(r['t_no'], r['t_full']) + 1e-9 for r in d)}",
+    })
+
+    # ---- Fig. 18: vs speedup at B=3 MB/s ------------------------------
+    for f in SPEEDUPS:
+        env = Environment.symmetric(bandwidth=3.0, speedup=f)
+        t_no, t_full, t_part = _schemes(ResponseTimeModel(), prof, env)
+        e_no, e_full, e_part = _schemes(EnergyModel(), prof, env)
+        data["speedup_sweep"].append(
+            dict(F=f, t_no=t_no, t_full=t_full, t_part=t_part,
+                 e_no=e_no, e_full=e_full, e_part=e_part)
+        )
+    d = data["speedup_sweep"]
+    rows.append({
+        "name": "gains/fig18_offloading_benefits_from_high_F",
+        "us_per_call": 0.0,
+        "derived": f"t_part(F=1)={d[0]['t_part']:.1f} → t_part(F=32)={d[-1]['t_part']:.1f}",
+    })
+    rows.append({
+        "name": "gains/fig18_small_F_full_offload_slower_than_local",
+        "us_per_call": 0.0,
+        "derived": f"ok={d[0]['t_full'] > d[0]['t_no']}",
+    })
+
+    # ---- Fig. 19: gains under the three cost models, ω=0.5 ------------
+    for bw in BANDWIDTHS:
+        env = Environment.symmetric(bandwidth=bw, speedup=3.0)
+        point = {"B": bw}
+        for name, model in (
+            ("time", ResponseTimeModel()),
+            ("energy", EnergyModel()),
+            ("weighted", WeightedModel(0.5)),
+        ):
+            no, _full, part = _schemes(model, prof, env)
+            point[name] = offloading_gain(no, part)
+        data["gain_sweep"].append(point)
+    d = data["gain_sweep"]
+    mid = d[len(d) // 2]
+    rows.append({
+        "name": "gains/fig19_energy_gain_largest",
+        "us_per_call": 0.0,
+        "derived": (
+            f"B={mid['B']}: energy={mid['energy']:.3f} ≥ "
+            f"weighted={mid['weighted']:.3f} ≥ time={mid['time']:.3f} "
+            f"ok={mid['energy'] >= mid['weighted'] - 1e-9 >= 0 and mid['weighted'] >= mid['time'] - 1e-9}"
+        ),
+    })
+    rows.append({
+        "name": "gains/fig19_gains_rise_with_bandwidth",
+        "us_per_call": 0.0,
+        "derived": f"time gain {d[0]['time']:.3f}→{d[-1]['time']:.3f}, "
+                   f"monotone={all(b['time'] >= a['time'] - 1e-9 for a, b in zip(d, d[1:]))}",
+    })
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/gains.json", "w") as f:
+        json.dump(data, f, indent=1)
+    return rows

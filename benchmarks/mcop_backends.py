@@ -1,0 +1,76 @@
+"""MCOP backend runtimes: numpy reference vs jitted-JAX vs Pallas-phase.
+
+The paper's §3.1 requires a *real-time online* partitioner.  This
+benchmark times the three implementations across graph sizes — the JAX
+and Pallas variants exist so the partitioner can run on-device inside a
+jitted control loop (the CPU timings here are indicative only; the point
+on TPU is avoiding the host round-trip entirely).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import mcop_jax, mcop_reference, random_wcg
+from repro.core.mcop import _mcop_jax_impl
+import jax.numpy as jnp
+
+
+def _time(fn, reps=3) -> float:
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[dict]:
+    rows: list[dict] = []
+    for n in (16, 64, 128):
+        g = random_wcg(n, edge_prob=0.2, rng=np.random.default_rng(n))
+        rows.append(
+            {
+                "name": f"backends/reference_n{n}",
+                "us_per_call": _time(lambda: mcop_reference(g)) * 1e6,
+                "derived": "",
+            }
+        )
+        # jit once, measure steady-state
+        adj = jnp.asarray(g.adj, jnp.float32)
+        wl = jnp.asarray(g.w_local, jnp.float32)
+        wc = jnp.asarray(g.w_cloud, jnp.float32)
+        pin = jnp.asarray(~g.offloadable)
+        _mcop_jax_impl(adj, wl, wc, pin)[0].block_until_ready()
+        rows.append(
+            {
+                "name": f"backends/jax_jitted_n{n}",
+                "us_per_call": _time(
+                    lambda: _mcop_jax_impl(adj, wl, wc, pin)[0].block_until_ready()
+                )
+                * 1e6,
+                "derived": "steady-state (compiled)",
+            }
+        )
+        cut_ref = mcop_reference(g).min_cut
+        cut_jax = float(_mcop_jax_impl(adj, wl, wc, pin)[0])
+        assert abs(cut_ref - cut_jax) / max(cut_ref, 1e-9) < 1e-4, (cut_ref, cut_jax)
+    # Pallas interpret-mode is Python-speed on CPU; time one small case so
+    # the number is recorded, flagged as interpret-only.
+    from repro.kernels import mcop_min_cut
+
+    g = random_wcg(16, edge_prob=0.2, rng=np.random.default_rng(16))
+    rows.append(
+        {
+            "name": "backends/pallas_phase_n16_interpret",
+            "us_per_call": _time(
+                lambda: mcop_min_cut(g.adj, g.w_local, g.w_cloud, g.offloadable),
+                reps=1,
+            )
+            * 1e6,
+            "derived": "interpret=True (CPU); compiled on TPU target",
+        }
+    )
+    return rows

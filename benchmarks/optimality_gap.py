@@ -1,0 +1,76 @@
+"""Beyond-paper: MCOP's optimality gap, quantified against exact oracles.
+
+The paper claims global optimality (Theorem 1 + §5.4); our reproduction
+found counterexamples (see DESIGN.md §1.1 and tests/test_mcop_property).
+This benchmark measures, per graph distribution, the fraction of
+instances where MCOP is exact and the gap statistics — plus the runtime
+of the exact max-flow alternative, which is what a deployment should use
+(same asymptotic class, exact answer).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    linear_graph,
+    loop_graph,
+    maxflow_optimal,
+    mcop_reference,
+    random_wcg,
+    tree_graph,
+)
+
+
+def _distribution(name: str, seed: int):
+    rng = np.random.default_rng(seed)
+    if name == "paper_linear":
+        return linear_graph(int(rng.integers(4, 16)), rng=rng)
+    if name == "paper_loop":
+        return loop_graph(int(rng.integers(4, 16)), rng=rng)
+    if name == "paper_tree":
+        return tree_graph(int(rng.integers(4, 16)), rng=rng)
+    if name == "adversarial":
+        n = int(rng.integers(3, 14))
+        return random_wcg(
+            n,
+            edge_prob=float(rng.choice([0.1, 0.3, 0.6, 0.9])),
+            speedup=float(rng.choice([1.2, 2.0, 3.0, 10.0])),
+            n_unoffloadable=int(rng.integers(1, max(2, n // 3))),
+            rng=rng,
+        )
+    raise ValueError(name)
+
+
+def run() -> list[dict]:
+    rows: list[dict] = []
+    n_trials = 150
+    for dist in ("paper_linear", "paper_loop", "paper_tree", "adversarial"):
+        gaps = []
+        exact = 0
+        t_mcop = t_exact = 0.0
+        for seed in range(n_trials):
+            g = _distribution(dist, seed)
+            t0 = time.perf_counter()
+            heur = mcop_reference(g).min_cut
+            t_mcop += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            opt = maxflow_optimal(g).cost
+            t_exact += time.perf_counter() - t0
+            gap = (heur - opt) / max(opt, 1e-12)
+            gaps.append(gap)
+            exact += gap < 1e-9
+        rows.append(
+            {
+                "name": f"optgap/{dist}",
+                "us_per_call": t_mcop / n_trials * 1e6,
+                "derived": (
+                    f"exact={exact / n_trials:.1%} mean_gap={np.mean(gaps):.3%} "
+                    f"p95_gap={np.percentile(gaps, 95):.3%} max_gap={max(gaps):.2%} "
+                    f"maxflow_us={t_exact / n_trials * 1e6:.0f}"
+                ),
+            }
+        )
+    return rows

@@ -1,0 +1,93 @@
+"""Roofline table from the dry-run artifact (results/dryrun_all.json).
+
+Per (arch × shape × mesh): the three terms (compute / HBM / interconnect)
+in seconds, the dominant one, MODEL_FLOPS/HLO_FLOPS (useful-compute
+ratio), and the roofline fraction
+
+    frac = compute_term / max(compute, memory, collective)
+
+— i.e. how close the cell is to being compute-bound at the paper's-target
+hardware rates (TPU v5e: 197 TF bf16, 819 GB/s HBM, ~50 GB/s ICI).
+
+Also nominates the three hillclimb cells per the assignment: worst
+roofline fraction, most collective-bound, most representative of the
+paper's technique (the biggest train cell — placement operates on its
+stage graph).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+ARTIFACT = os.environ.get("DRYRUN_JSON", "")
+if not ARTIFACT:
+    for cand in ("results/dryrun_corrected.json", "results/dryrun_all.json"):
+        if os.path.exists(cand):
+            ARTIFACT = cand
+            break
+    else:
+        ARTIFACT = "results/dryrun_all.json"
+
+
+def run() -> list[dict]:
+    rows: list[dict] = []
+    if not os.path.exists(ARTIFACT):
+        rows.append(
+            {
+                "name": "roofline/missing_artifact",
+                "us_per_call": 0.0,
+                "derived": f"run `python -m repro.launch.dryrun --all --out {ARTIFACT}` first",
+            }
+        )
+        return rows
+    with open(ARTIFACT) as f:
+        cells = json.load(f)
+
+    ok = [c for c in cells if "roofline" in c]
+    err = [c for c in cells if "error" in c]
+    skipped = [c for c in cells if "skipped" in c]
+    rows.append(
+        {
+            "name": "roofline/cells",
+            "us_per_call": 0.0,
+            "derived": f"ok={len(ok)} errors={len(err)} skipped={len(skipped)}",
+        }
+    )
+    for c in ok:
+        r = c["roofline"]
+        mesh = "x".join(map(str, c["mesh"]))
+        frac = r["compute_s"] / max(r["step_time_s"], 1e-30)
+        rows.append(
+            {
+                "name": f"roofline/{c['arch']}/{c['shape']}/{mesh}",
+                "us_per_call": r["step_time_s"] * 1e6,
+                "derived": (
+                    f"compute={r['compute_s']:.3e}s hbm={r['memory_s']:.3e}s "
+                    f"coll={r['collective_s']:.3e}s dom={r['dominant']} "
+                    f"frac={frac:.3f} useful={c.get('useful_flops_ratio') or 0:.3f}"
+                ),
+            }
+        )
+
+    # nominate hillclimb cells (single-pod mesh, one per criterion)
+    single = [c for c in ok if not c["multi_pod"]]
+    if single:
+        worst = min(
+            single,
+            key=lambda c: c["roofline"]["compute_s"]
+            / max(c["roofline"]["step_time_s"], 1e-30),
+        )
+        coll = max(single, key=lambda c: c["roofline"]["collective_s"])
+        train = [c for c in single if c["kind"] == "train"]
+        rep = max(train, key=lambda c: c["flops_per_device"]) if train else worst
+        for tag, c in (("worst_frac", worst), ("most_collective", coll),
+                       ("paper_representative", rep)):
+            rows.append(
+                {
+                    "name": f"roofline/hillclimb/{tag}",
+                    "us_per_call": 0.0,
+                    "derived": f"{c['arch']}×{c['shape']}",
+                }
+            )
+    return rows

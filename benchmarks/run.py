@@ -1,0 +1,58 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only complexity,gains,...]
+
+Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
+
+    complexity      → Fig. 14 (runtime vs |V|, B&B comparator)
+    gains           → Figs. 17–19 (schemes vs B and F; 3 cost models)
+    optimality_gap  → beyond-paper: Theorem 1 gap quantification
+    mcop_backends   → §3.1 real-time requirement (ref vs jit vs Pallas)
+    roofline        → §Roofline table from the dry-run artifact
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import (
+    complexity,
+    compression_ablation,
+    gains,
+    mcop_backends,
+    optimality_gap,
+    roofline,
+)
+
+MODULES = {
+    "complexity": complexity,
+    "gains": gains,
+    "optimality_gap": optimality_gap,
+    "mcop_backends": mcop_backends,
+    "compression_ablation": compression_ablation,
+    "roofline": roofline,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", help="comma-separated subset of benchmarks")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            for row in MODULES[name].run():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.2f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/ERROR,0.00,{e!r}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

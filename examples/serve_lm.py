@@ -1,0 +1,27 @@
+"""Serving example: batched requests through the KV-cache engine with the
+MCOP prefill/decode-pool placement report.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch import serve as serve_cli
+
+
+def main():
+    argv = [
+        "--arch", "qwen3-32b",
+        "--reduced",
+        "--requests", "12",
+        "--max-new-tokens", "16",
+        "--max-batch", "4",
+        "--prompt-len", "24",
+        "--temperature", "0.7",
+    ]
+    print(f"[example] python -m repro.launch.serve {' '.join(argv)}")
+    return serve_cli.main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

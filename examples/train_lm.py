@@ -1,0 +1,41 @@
+"""End-to-end training example: a ~100M-parameter decoder LM for a few
+hundred steps on the synthetic pipeline, with checkpoint/resume and an
+MCOP placement report.
+
+This drives the same launcher as production (`repro.launch.train`); the
+~100M model is a width/depth-reduced qwen2-family config (the full
+assigned configs are exercised via the dry-run — this machine is one CPU).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    argv = [
+        "--arch", "qwen2-7b",
+        "--reduced",
+        "--steps", str(args.steps),
+        "--seq-len", "128",
+        "--global-batch", "16",
+        "--n-micro", "2",
+        "--lr", "1e-3",
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "100",
+        "--log-every", "20",
+    ]
+    print(f"[example] python -m repro.launch.train {' '.join(argv)}")
+    return train_cli.main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

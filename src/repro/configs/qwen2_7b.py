@@ -1,0 +1,16 @@
+"""qwen2-7b: dense 28L, GQA kv=4, QKV bias.  [arXiv:2407.10671; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152_064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1e6,
+)

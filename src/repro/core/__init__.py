@@ -1,0 +1,65 @@
+"""Core: the paper's contribution — WCGs, MCOP, cost models, baselines."""
+
+from repro.core.graph import (
+    WCG,
+    face_recognition_graph,
+    linear_graph,
+    loop_graph,
+    mesh_graph,
+    paper_example_graph,
+    random_wcg,
+    tree_graph,
+)
+from repro.core.mcop import MCOPResult, PhaseRecord, mcop, mcop_jax, mcop_reference
+from repro.core.baselines import (
+    PartitionResult,
+    branch_and_bound,
+    brute_force,
+    chain_dp,
+    full_offloading,
+    maxflow_optimal,
+    no_offloading,
+)
+from repro.core.cost_models import (
+    AppProfile,
+    CostModel,
+    EnergyModel,
+    Environment,
+    ResponseTimeModel,
+    WeightedModel,
+    offloading_gain,
+)
+from repro.core.adaptive import AdaptationEvent, AdaptiveController, EnvironmentDrift
+
+__all__ = [
+    "WCG",
+    "face_recognition_graph",
+    "linear_graph",
+    "loop_graph",
+    "mesh_graph",
+    "paper_example_graph",
+    "random_wcg",
+    "tree_graph",
+    "MCOPResult",
+    "PhaseRecord",
+    "mcop",
+    "mcop_jax",
+    "mcop_reference",
+    "PartitionResult",
+    "branch_and_bound",
+    "brute_force",
+    "chain_dp",
+    "full_offloading",
+    "maxflow_optimal",
+    "no_offloading",
+    "AppProfile",
+    "CostModel",
+    "EnergyModel",
+    "Environment",
+    "ResponseTimeModel",
+    "WeightedModel",
+    "offloading_gain",
+    "AdaptationEvent",
+    "AdaptiveController",
+    "EnvironmentDrift",
+]

@@ -1,0 +1,153 @@
+"""Environment-adaptive re-partitioning (paper §3.2, Fig. 1).
+
+The paper's workflow: profile once, partition, then *monitor* the mobile
+environment (bandwidth, cloud speed); when drift exceeds a threshold,
+re-partition with the new parameters.  Here the same loop drives
+re-placement across TPU tiers: the network profiler's bandwidth estimate
+(ICI/DCN/PCIe) and the tier speed ratio F play the paper's roles, and
+"re-partition" maps to re-running MCOP and re-emitting placement artifacts
+(see `repro.core.placement`).  Elastic events (chip loss) enter the same
+path: they change the tier compute capacity, i.e. F.
+
+Hysteresis: re-partitioning is itself a cost (recompilation/resharding in
+our setting; process migration in the paper's), so the controller only
+acts on *relative* drift above ``threshold`` and enforces a cooldown of
+``min_interval`` environment updates between repartitions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core import baselines
+from repro.core.cost_models import AppProfile, CostModel, Environment, offloading_gain
+from repro.core.graph import WCG
+from repro.core.mcop import MCOPResult, mcop
+
+__all__ = ["EnvironmentDrift", "AdaptiveController", "AdaptationEvent"]
+
+
+@dataclasses.dataclass
+class AdaptationEvent:
+    step: int
+    env: Environment
+    result: MCOPResult
+    partial_cost: float
+    no_offload_cost: float
+    full_offload_cost: float
+    gain: float
+    repartitioned: bool
+
+
+class EnvironmentDrift:
+    """Tracks relative drift of the (B, F) environment since last partition."""
+
+    def __init__(self, threshold: float = 0.10):
+        self.threshold = threshold
+        self._anchor: Environment | None = None
+
+    def anchor(self, env: Environment) -> None:
+        self._anchor = env
+
+    def exceeded(self, env: Environment) -> bool:
+        if self._anchor is None:
+            return True
+        a = self._anchor
+
+        def rel(new: float, old: float) -> float:
+            return abs(new - old) / max(abs(old), 1e-30)
+
+        return (
+            rel(env.bandwidth_up, a.bandwidth_up) > self.threshold
+            or rel(env.bandwidth_down, a.bandwidth_down) > self.threshold
+            or rel(env.speedup, a.speedup) > self.threshold
+        )
+
+
+class AdaptiveController:
+    """Fig. 1 loop: (re-)partition when the monitored environment drifts.
+
+    Parameters:
+      profile:     program-profiler output (environment-independent).
+      cost_model:  which objective (time / energy / weighted).
+      threshold:   relative drift that triggers re-partitioning.
+      min_interval: cooldown in observe() calls between repartitions.
+      backend:     MCOP backend ("reference" or "jax").
+    """
+
+    def __init__(
+        self,
+        profile: AppProfile,
+        cost_model: CostModel,
+        *,
+        threshold: float = 0.10,
+        min_interval: int = 1,
+        backend: str = "reference",
+    ):
+        self.profile = profile
+        self.cost_model = cost_model
+        self.drift = EnvironmentDrift(threshold)
+        self.min_interval = min_interval
+        self.backend = backend
+        self._steps_since = 10**9
+        self._step = 0
+        self._current: MCOPResult | None = None
+        self.history: list[AdaptationEvent] = []
+
+    # ------------------------------------------------------------------
+    def observe(self, env: Environment) -> AdaptationEvent:
+        """Feed one environment measurement; repartition if warranted."""
+        self._step += 1
+        self._steps_since += 1
+        g = self.cost_model.build(self.profile, env)
+        repartition = (
+            self._current is None
+            or (self.drift.exceeded(env) and self._steps_since >= self.min_interval)
+        )
+        if repartition:
+            candidate = mcop(g, backend=self.backend)
+            # paper §4.3: only partition when beneficial — compare against
+            # the all-local plan (MCOP's phase cuts never return it).
+            no_off = baselines.no_offloading(g)
+            if no_off.cost < candidate.min_cut:
+                candidate = MCOPResult(
+                    min_cut=no_off.cost,
+                    local_mask=no_off.local_mask,
+                    phases=candidate.phases,
+                )
+            self._current = candidate
+            self.drift.anchor(env)
+            self._steps_since = 0
+        assert self._current is not None
+        # Cost of the *current* placement under the *new* environment: if we
+        # chose not to repartition, we still pay today's prices.
+        partial = g.total_cost(self._current.local_mask)
+        no_off = baselines.no_offloading(g).cost
+        full = baselines.full_offloading(g).cost
+        event = AdaptationEvent(
+            step=self._step,
+            env=env,
+            result=self._current,
+            partial_cost=partial,
+            no_offload_cost=no_off,
+            full_offload_cost=full,
+            gain=offloading_gain(no_off, partial),
+            repartitioned=repartition,
+        )
+        self.history.append(event)
+        return event
+
+    # ------------------------------------------------------------------
+    def sweep(
+        self, envs: list[Environment]
+    ) -> list[AdaptationEvent]:
+        return [self.observe(e) for e in envs]
+
+    @property
+    def placement(self) -> MCOPResult:
+        if self._current is None:
+            raise RuntimeError("no partition computed yet; call observe()")
+        return self._current

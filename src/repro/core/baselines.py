@@ -1,0 +1,301 @@
+"""Baselines the paper compares against, plus independent optimality oracles.
+
+* :func:`no_offloading` / :func:`full_offloading` — the paper's §7.1
+  comparison schemes.
+* :func:`brute_force` — exhaustive enumeration over all 2^k placements of
+  the k offloadable vertices (vectorised).  Exponential; the ground-truth
+  oracle for property tests.
+* :func:`branch_and_bound` — the paper's stand-in for the MAUI/CloneCloud
+  "LP solver" (§5.4): best-first branch and bound with an admissible
+  lower bound.  Exact, exponential worst case; used by the Fig. 14
+  complexity benchmark.
+* :func:`maxflow_optimal` — exact polynomial solution via the classical
+  min s–t cut reduction (project-selection construction).  The paper does
+  not include this; we add it as a second, *independent* oracle and as the
+  beyond-paper "exact and still polynomial" reference point.
+* :func:`chain_dp` — O(n) dynamic program for linear topologies (the
+  Fig. 2(b) case; the [11]-style sequential-call baseline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+
+import numpy as np
+
+from repro.core.graph import WCG
+
+__all__ = [
+    "PartitionResult",
+    "no_offloading",
+    "full_offloading",
+    "brute_force",
+    "branch_and_bound",
+    "maxflow_optimal",
+    "chain_dp",
+]
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    cost: float
+    local_mask: np.ndarray
+    nodes_expanded: int = 0  # search effort (branch & bound reporting)
+
+
+# ----------------------------------------------------------------------
+# Trivial schemes (§7.1)
+# ----------------------------------------------------------------------
+
+
+def no_offloading(g: WCG) -> PartitionResult:
+    mask = np.ones(g.n, dtype=bool)
+    return PartitionResult(cost=g.total_cost(mask), local_mask=mask)
+
+
+def full_offloading(g: WCG) -> PartitionResult:
+    """Everything offloadable goes to the cloud (unoffloadables stay)."""
+    mask = ~g.offloadable
+    return PartitionResult(cost=g.total_cost(mask), local_mask=mask)
+
+
+# ----------------------------------------------------------------------
+# Brute force (vectorised) — ground-truth oracle
+# ----------------------------------------------------------------------
+
+
+def brute_force(g: WCG, *, max_free: int = 22) -> PartitionResult:
+    free = np.nonzero(g.offloadable)[0]
+    k = free.size
+    if k > max_free:
+        raise ValueError(f"brute force limited to {max_free} free vertices, got {k}")
+    m = 1 << k
+    # (m, k) bit table: 1 == run locally
+    bits = (np.arange(m, dtype=np.int64)[:, None] >> np.arange(k)) & 1
+    placements = np.ones((m, g.n), dtype=bool)
+    placements[:, free] = bits.astype(bool)
+
+    node_cost = placements @ g.w_local + (~placements) @ g.w_cloud
+    iu, ju = np.nonzero(np.triu(g.adj))
+    w_e = g.adj[iu, ju]
+    cut = placements[:, iu] != placements[:, ju]
+    comm_cost = cut @ w_e
+    total = node_cost + comm_cost
+    best = int(np.argmin(total))
+    return PartitionResult(
+        cost=float(total[best]), local_mask=placements[best], nodes_expanded=m
+    )
+
+
+# ----------------------------------------------------------------------
+# Branch and bound — the paper's "LP solver" comparator (§5.4)
+# ----------------------------------------------------------------------
+
+
+def branch_and_bound(g: WCG, *, node_limit: int = 5_000_000) -> PartitionResult:
+    """Best-first B&B over vertex assignments.
+
+    Lower bound for a partial assignment: committed node+cut cost, plus
+    Σ min(w_local, w_cloud) over unassigned vertices (edges among or to
+    unassigned vertices are optimistically free).  Admissible ⇒ exact.
+    """
+    n = g.n
+    order = np.argsort(-(np.abs(g.gains)))  # decide high-impact vertices first
+    order = np.concatenate(
+        [order[~g.offloadable[order]], order[g.offloadable[order]]]
+    )
+    opt_rest = np.zeros(n + 1)
+    mins = np.minimum(g.w_local, g.w_cloud)[order]
+    opt_rest[:n] = np.cumsum(mins[::-1])[::-1]
+
+    expanded = 0
+    best_cost = np.inf
+    best_mask = np.ones(n, dtype=bool)
+    # heap items: (bound, counter, depth, assignment list)
+    heap = [(opt_rest[0], 0, 0, ())]
+    counter = itertools.count(1)
+    while heap:
+        bound, _, depth, assign = heapq.heappop(heap)
+        if bound >= best_cost:
+            break
+        expanded += 1
+        if expanded > node_limit:
+            raise RuntimeError("branch_and_bound node limit exceeded")
+        if depth == n:
+            mask = np.ones(n, dtype=bool)
+            for d, a in enumerate(assign):
+                mask[order[d]] = bool(a)
+            cost = g.total_cost(mask)
+            if cost < best_cost:
+                best_cost, best_mask = cost, mask
+            continue
+        v = order[depth]
+        choices = (True,) if not g.offloadable[v] else (True, False)
+        for local in choices:
+            new_assign = assign + (local,)
+            # committed cost: nodes decided so far + cut edges both of whose
+            # endpoints are decided.
+            cost = 0.0
+            for d, a in enumerate(new_assign):
+                u = order[d]
+                cost += g.w_local[u] if a else g.w_cloud[u]
+                for d2 in range(d):
+                    u2 = order[d2]
+                    if g.adj[u, u2] and (a != new_assign[d2]):
+                        cost += g.adj[u, u2]
+            bound = cost + opt_rest[depth + 1]
+            if bound < best_cost:
+                heapq.heappush(heap, (bound, next(counter), depth + 1, new_assign))
+    return PartitionResult(
+        cost=float(best_cost), local_mask=best_mask, nodes_expanded=expanded
+    )
+
+
+# ----------------------------------------------------------------------
+# Exact polynomial oracle: min s–t cut via max-flow (Dinic)
+# ----------------------------------------------------------------------
+
+
+class _Dinic:
+    def __init__(self, n: int):
+        self.n = n
+        self.head: list[list[int]] = [[] for _ in range(n)]
+        self.to: list[int] = []
+        self.cap: list[float] = []
+
+    def add_edge(self, u: int, v: int, c: float) -> None:
+        self.head[u].append(len(self.to))
+        self.to.append(v)
+        self.cap.append(float(c))
+        self.head[v].append(len(self.to))
+        self.to.append(u)
+        self.cap.append(0.0)
+
+    def _bfs(self, s: int, t: int) -> bool:
+        self.level = [-1] * self.n
+        self.level[s] = 0
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            for eid in self.head[u]:
+                v = self.to[eid]
+                if self.cap[eid] > 1e-12 and self.level[v] < 0:
+                    self.level[v] = self.level[u] + 1
+                    q.append(v)
+        return self.level[t] >= 0
+
+    def _dfs(self, u: int, t: int, f: float) -> float:
+        if u == t:
+            return f
+        while self.it[u] < len(self.head[u]):
+            eid = self.head[u][self.it[u]]
+            v = self.to[eid]
+            if self.cap[eid] > 1e-12 and self.level[v] == self.level[u] + 1:
+                d = self._dfs(v, t, min(f, self.cap[eid]))
+                if d > 1e-12:
+                    self.cap[eid] -= d
+                    self.cap[eid ^ 1] += d
+                    return d
+            self.it[u] += 1
+        return 0.0
+
+    def max_flow(self, s: int, t: int) -> float:
+        flow = 0.0
+        while self._bfs(s, t):
+            self.it = [0] * self.n
+            while True:
+                f = self._dfs(s, t, np.inf)
+                if f <= 1e-12:
+                    break
+                flow += f
+        return flow
+
+    def min_cut_side(self, s: int) -> np.ndarray:
+        """Vertices reachable from s in the residual graph (source side)."""
+        seen = np.zeros(self.n, dtype=bool)
+        seen[s] = True
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            for eid in self.head[u]:
+                v = self.to[eid]
+                if self.cap[eid] > 1e-12 and not seen[v]:
+                    seen[v] = True
+                    q.append(v)
+        return seen
+
+
+def maxflow_optimal(g: WCG) -> PartitionResult:
+    """Exact optimum of Eq. 2 via the min s–t cut reduction.
+
+    Construction (source side == local tier):
+      * s → v with capacity w_cloud(v)   (pay w_cloud iff v ends up remote)
+      * v → t with capacity w_local(v)   (pay w_local iff v stays local)
+      * u ↔ v with capacity w(e(u, v))   (pay comm iff the edge is cut)
+      * s → v with capacity ∞ for unoffloadable v (pins v to the local side)
+
+    The value of the min cut equals min_I C_total(I).
+    """
+    n = g.n
+    s, t = n, n + 1
+    net = _Dinic(n + 2)
+    big = float(g.w_local.sum() + g.w_cloud.sum() + g.adj.sum() + 1.0)
+    for v in range(n):
+        cap_s = g.w_cloud[v] + (0.0 if g.offloadable[v] else big)
+        if cap_s > 0:
+            net.add_edge(s, v, cap_s)
+        if g.w_local[v] > 0:
+            net.add_edge(v, t, g.w_local[v])
+    iu, ju = np.nonzero(np.triu(g.adj))
+    for u, v in zip(iu, ju):
+        net.add_edge(int(u), int(v), g.adj[u, v])
+        net.add_edge(int(v), int(u), g.adj[u, v])
+    flow = net.max_flow(s, t)
+    local_mask = net.min_cut_side(s)[:n]
+    # Degenerate zero-capacity vertices may be unreachable yet must stay
+    # local when pinned; enforce and recompute the (equal) cost.
+    local_mask |= ~g.offloadable
+    return PartitionResult(cost=float(g.total_cost(local_mask)), local_mask=local_mask,
+                           nodes_expanded=int(flow == flow))
+
+
+# ----------------------------------------------------------------------
+# Linear-chain dynamic program (Fig. 2(b) topologies)
+# ----------------------------------------------------------------------
+
+
+def chain_dp(g: WCG) -> PartitionResult:
+    """O(n) DP for chains: state = (position, side).  Exact for linear WCGs."""
+    n = g.n
+    for i in range(n):
+        for j in range(i + 1, n):
+            if g.adj[i, j] and j != i + 1:
+                raise ValueError("chain_dp requires a linear topology")
+    INF = np.inf
+    # dp[side] at vertex i; side 0 = local, 1 = cloud
+    dp = np.array(
+        [g.w_local[0], g.w_cloud[0] if g.offloadable[0] else INF]
+    )
+    choice = np.zeros((n, 2), dtype=np.int8)
+    for i in range(1, n):
+        w_edge = g.adj[i - 1, i]
+        here = np.array(
+            [g.w_local[i], g.w_cloud[i] if g.offloadable[i] else INF]
+        )
+        new_dp = np.full(2, INF)
+        for side in range(2):
+            for prev in range(2):
+                c = dp[prev] + here[side] + (w_edge if prev != side else 0.0)
+                if c < new_dp[side]:
+                    new_dp[side] = c
+                    choice[i, side] = prev
+        dp = new_dp
+    side = int(np.argmin(dp))
+    mask = np.zeros(n, dtype=bool)
+    for i in range(n - 1, -1, -1):
+        mask[i] = side == 0
+        side = int(choice[i, side])
+    return PartitionResult(cost=float(np.min(dp)), local_mask=mask)

@@ -1,0 +1,212 @@
+"""Partitioning cost models (paper §4.3).
+
+An :class:`AppProfile` is the raw, environment-independent description of
+an application that the profilers produce: per-task local execution times
+and per-invocation transfer sizes.  A cost model turns a profile plus the
+current *environment* (bandwidth B, speedup F, device powers) into a
+:class:`~repro.core.graph.WCG` whose total cost under a placement equals
+the paper's objective:
+
+* :class:`ResponseTimeModel`   — Eq. 4  (T_total)
+* :class:`EnergyModel`         — Eq. 6  (E_total)
+* :class:`WeightedModel`       — Eq. 8  (ω-blend, normalised by the
+  all-local costs so time and energy are dimensionless and comparable)
+
+Offloading gains (Eqs. 5/7/9) are provided as
+:func:`offloading_gain`: ``1 − partial/no-offloading``.
+
+Hardware constants default to the paper's HP iPAQ measurements
+(P_m≈0.9 W, P_i≈0.3 W, P_tr≈1.3 W, §7.1) so the reproduction figures are
+directly comparable to Figs. 17–19.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import WCG
+
+__all__ = [
+    "Environment",
+    "AppProfile",
+    "CostModel",
+    "ResponseTimeModel",
+    "EnergyModel",
+    "WeightedModel",
+    "offloading_gain",
+    "PAPER_POWERS",
+]
+
+# Paper §7.1 fixed values (HP iPAQ PDA, 400 MHz XScale).
+PAPER_POWERS = dict(p_compute=0.9, p_idle=0.3, p_transfer=1.3)
+
+
+@dataclasses.dataclass(frozen=True)
+class Environment:
+    """Mutable mobile environment (paper Fig. 1): what the profilers track.
+
+    bandwidth_up/down are in data-units per time-unit (the paper assumes
+    B_up == B_down for convenience; we keep both).  ``speedup`` is F.
+    """
+
+    bandwidth_up: float
+    bandwidth_down: float
+    speedup: float
+    p_compute: float = PAPER_POWERS["p_compute"]
+    p_idle: float = PAPER_POWERS["p_idle"]
+    p_transfer: float = PAPER_POWERS["p_transfer"]
+
+    @classmethod
+    def symmetric(cls, bandwidth: float, speedup: float, **kw) -> "Environment":
+        return cls(bandwidth, bandwidth, speedup, **kw)
+
+    def replace(self, **kw) -> "Environment":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class AppProfile:
+    """Environment-independent application profile (program profiler output).
+
+    Attributes:
+      t_local:   (n,) local execution time of each task.
+      data_in:   (n, n) — data_in[i, j] = bytes sent i→j on invocation
+                 (paper's in_ij); asymmetric in general.
+      data_out:  (n, n) — data_out[i, j] = bytes returned j→i (out_ji).
+      offloadable: (n,) bool.
+      names:     labels.
+    """
+
+    t_local: np.ndarray
+    data_in: np.ndarray
+    data_out: np.ndarray
+    offloadable: np.ndarray
+    names: list[str] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self.t_local = np.asarray(self.t_local, dtype=np.float64)
+        self.data_in = np.asarray(self.data_in, dtype=np.float64)
+        self.data_out = np.asarray(self.data_out, dtype=np.float64)
+        self.offloadable = np.asarray(self.offloadable, dtype=bool)
+        if not self.names:
+            self.names = [f"v{i}" for i in range(self.n)]
+
+    @property
+    def n(self) -> int:
+        return int(self.t_local.shape[0])
+
+    @classmethod
+    def from_wcg_times(cls, g: WCG, *, bandwidth: float = 1.0) -> "AppProfile":
+        """Invert Eq. 1 assuming symmetric bandwidth: recover transfer sizes."""
+        data = g.adj * bandwidth / 2.0
+        return cls(
+            t_local=g.w_local.copy(),
+            data_in=data,
+            data_out=data.T.copy(),
+            offloadable=g.offloadable.copy(),
+            names=list(g.names),
+        )
+
+
+def _edge_time(profile: AppProfile, env: Environment) -> np.ndarray:
+    """Eq. 1: w(e(v_i, v_j)) = in_ij/B_up + out_ij/B_down, symmetrised.
+
+    The communication charge is paid once per cut edge regardless of
+    direction, so the WCG edge weight is the *total* transfer time across
+    the (i, j) boundary.
+    """
+    per_dir = profile.data_in / env.bandwidth_up + profile.data_out / env.bandwidth_down
+    return per_dir + per_dir.T
+
+
+class CostModel:
+    """Base: maps (profile, environment) → WCG.  Subclasses fill weights."""
+
+    name = "abstract"
+
+    def build(self, profile: AppProfile, env: Environment) -> WCG:
+        raise NotImplementedError
+
+    def local_total(self, profile: AppProfile, env: Environment) -> float:
+        """Cost of the no-offloading scheme (denominator of the gains)."""
+        return float(self.build(profile, env).total_cost(np.ones(profile.n, bool)))
+
+
+class ResponseTimeModel(CostModel):
+    """Eq. 4: node = execution time on the given side; edge = transfer time."""
+
+    name = "time"
+
+    def build(self, profile: AppProfile, env: Environment) -> WCG:
+        t_l = profile.t_local
+        t_c = t_l / env.speedup  # T_v^l = F · T_v^c  (F > 1)
+        return WCG(
+            w_local=t_l,
+            w_cloud=t_c,
+            adj=_edge_time(profile, env),
+            offloadable=profile.offloadable,
+            names=list(profile.names),
+        )
+
+
+class EnergyModel(CostModel):
+    """Eq. 6: mobile-side energy.
+
+    Local run: P_m · T_l.  Remote run: the device idles while the cloud
+    computes — P_i · T_c.  Cut edge: P_tr · transfer time.
+    """
+
+    name = "energy"
+
+    def build(self, profile: AppProfile, env: Environment) -> WCG:
+        t_l = profile.t_local
+        t_c = t_l / env.speedup
+        return WCG(
+            w_local=env.p_compute * t_l,
+            w_cloud=env.p_idle * t_c,
+            adj=env.p_transfer * _edge_time(profile, env),
+            offloadable=profile.offloadable,
+            names=list(profile.names),
+        )
+
+
+class WeightedModel(CostModel):
+    """Eq. 8: ω·T/T_local + (1−ω)·E/E_local.
+
+    Linearity makes the blend itself a WCG: every node/edge weight is the
+    ω-combination of the normalised time and energy weights, so MCOP (or
+    any partitioner) applies unchanged — this is why the paper can reuse
+    one algorithm across all three objectives.
+    """
+
+    name = "weighted"
+
+    def __init__(self, omega: float = 0.5):
+        if not 0.0 <= omega <= 1.0:
+            raise ValueError("omega must be in [0, 1]")
+        self.omega = omega
+        self._time = ResponseTimeModel()
+        self._energy = EnergyModel()
+
+    def build(self, profile: AppProfile, env: Environment) -> WCG:
+        gt = self._time.build(profile, env)
+        ge = self._energy.build(profile, env)
+        t_norm = max(float(gt.w_local.sum()), 1e-30)  # T_local
+        e_norm = max(float(ge.w_local.sum()), 1e-30)  # E_local
+        w = self.omega
+        return WCG(
+            w_local=w * gt.w_local / t_norm + (1 - w) * ge.w_local / e_norm,
+            w_cloud=w * gt.w_cloud / t_norm + (1 - w) * ge.w_cloud / e_norm,
+            adj=w * gt.adj / t_norm + (1 - w) * ge.adj / e_norm,
+            offloadable=profile.offloadable,
+            names=list(profile.names),
+        )
+
+
+def offloading_gain(no_offload_cost: float, partial_cost: float) -> float:
+    """§7.1: Offloading Gain = 1 − partial/no-offloading (as a fraction)."""
+    if no_offload_cost <= 0:
+        return 0.0
+    return 1.0 - partial_cost / no_offload_cost

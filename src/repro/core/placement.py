@@ -1,0 +1,234 @@
+"""Placement mapper: MCOP partitions → executable distribution artifacts.
+
+This is where the paper's output (a vertex bipartition of the WCG) becomes
+something a TPU runtime can act on.  The vertices of the framework-level
+WCG are *stages* (embedding, transformer block groups, head, frontends);
+the two sides are *tiers* (e.g. pod-0 vs pod-1, or HBM vs host).  The
+mapper produces:
+
+* a per-stage tier assignment (the raw MCOP answer),
+* a *contiguous pipeline split* for chain-structured models — pipeline
+  execution over the ``pod`` mesh axis needs contiguous stage ranges, so
+  the mapper computes the optimal contiguous refinement (exact scan over
+  boundaries) and reports the contiguity penalty vs. the unconstrained
+  MCOP cut,
+* cut-edge statistics (activation bytes crossing tiers per microbatch)
+  that the runtime uses to size `ppermute` transfers and that the
+  roofline analysis charges to the collective term.
+
+Tier and stage descriptions are deliberately analytic (FLOPs, bytes) so
+the same machinery serves the dry-run (no hardware) and a real cluster
+(profiled numbers swap in transparently — same WCG shape).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import baselines
+from repro.core.graph import WCG
+from repro.core.mcop import MCOPResult, mcop
+
+__all__ = [
+    "TierSpec",
+    "StageSpec",
+    "TPUV5E_TIER",
+    "build_stage_wcg",
+    "PlacementPlan",
+    "plan_placement",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One side of the offloading decision: a set of chips (or the host).
+
+    peak_flops:  per-chip peak (bf16 FLOP/s)
+    hbm_bw:      per-chip HBM bytes/s
+    chips:       chips in the tier
+    link_bw:     bytes/s available *to the other tier* (DCN / ICI / PCIe)
+    p_compute/p_idle/p_transfer: per-chip watts for the energy model
+    """
+
+    name: str
+    chips: int
+    peak_flops: float
+    hbm_bw: float
+    link_bw: float
+    p_compute: float = 250.0
+    p_idle: float = 60.0
+    p_transfer: float = 40.0
+
+    @property
+    def total_flops(self) -> float:
+        return self.chips * self.peak_flops
+
+    @property
+    def total_hbm_bw(self) -> float:
+        return self.chips * self.hbm_bw
+
+
+# TPU v5e constants used throughout the roofline analysis.
+TPUV5E_TIER = TierSpec(
+    name="v5e-pod",
+    chips=256,
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    link_bw=50e9,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One vertex of the framework-level WCG.
+
+    flops:          FLOPs per step for this stage (fwd+bwd for training).
+    bytes_hbm:      HBM traffic per step (weights + activations).
+    act_bytes_out:  activation bytes flowing to each successor per step —
+                    the WCG edge weight numerator (Eq. 1's in/out data).
+    pinned_tier:    None = offloadable; 0/1 = must run on that tier
+                    (paper's unoffloadable tasks: ingest, sampler, IO).
+    """
+
+    name: str
+    flops: float
+    bytes_hbm: float
+    act_bytes_out: float
+    params_bytes: float = 0.0
+    pinned_tier: int | None = None
+    successors: tuple[int, ...] = ()  # stage indices; default: next in chain
+
+
+def _stage_time(stage: StageSpec, tier: TierSpec) -> float:
+    """Roofline step-time estimate of a stage on a tier: max(compute, memory)."""
+    return max(stage.flops / tier.total_flops, stage.bytes_hbm / tier.total_hbm_bw)
+
+
+def build_stage_wcg(
+    stages: Sequence[StageSpec],
+    tier_local: TierSpec,
+    tier_remote: TierSpec,
+    *,
+    inter_tier_bw: float | None = None,
+) -> WCG:
+    """Stage chain/graph → WCG under the response-time cost model.
+
+    ``w_local``/``w_cloud`` are roofline step times on the two tiers;
+    edges charge activation transfer over the inter-tier link (Eq. 1 with
+    B_up = B_down = link bandwidth).  Stages pinned to the remote tier are
+    encoded with an infinite local cost (and vice versa via
+    ``offloadable=False``).
+    """
+    n = len(stages)
+    bw = inter_tier_bw or min(tier_local.link_bw, tier_remote.link_bw)
+    w_local = np.zeros(n)
+    w_cloud = np.zeros(n)
+    offloadable = np.ones(n, dtype=bool)
+    adj = np.zeros((n, n))
+    big = 0.0
+    for i, st in enumerate(stages):
+        w_local[i] = _stage_time(st, tier_local)
+        w_cloud[i] = _stage_time(st, tier_remote)
+        big += w_local[i] + w_cloud[i]
+    for i, st in enumerate(stages):
+        succ = st.successors if st.successors else ((i + 1,) if i + 1 < n else ())
+        for j in succ:
+            w = st.act_bytes_out / bw
+            adj[i, j] += w
+            adj[j, i] += w
+        if st.pinned_tier == 0:
+            offloadable[i] = False
+        elif st.pinned_tier == 1:
+            # pin to remote: make local execution prohibitively expensive
+            w_local[i] = big * 1e3 + w_local[i]
+    names = [s.name for s in stages]
+    return WCG(w_local, w_cloud, adj, offloadable, names=names)
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    """Executable outcome of one MCOP run over a stage graph."""
+
+    stage_tier: np.ndarray        # (n,) int — 0 local tier, 1 remote tier
+    mcop_cost: float              # unconstrained MCOP cut value
+    contiguous_boundary: int      # stages [0, b) on tier0, [b, n) on tier1
+    contiguous_cost: float        # cost of the contiguous refinement
+    contiguity_penalty: float     # contiguous_cost − mcop_cost (≥ −eps)
+    cut_bytes: float              # activation bytes crossing tiers per step
+    result: MCOPResult
+
+    @property
+    def is_split(self) -> bool:
+        return 0 < self.contiguous_boundary < self.stage_tier.shape[0]
+
+    def tier_stages(self, tier: int) -> np.ndarray:
+        return np.nonzero(self.stage_tier == tier)[0]
+
+
+def _contiguous_refinement(g: WCG) -> tuple[int, float]:
+    """Best chain split: stages [0, b) local, [b, n) remote.  Exact O(n²).
+
+    b == n means everything local (no offloading); b == 0 would violate
+    pinned-local stages, so b ranges over [1, n].
+    """
+    n = g.n
+    best_b, best_cost = n, np.inf
+    for b in range(1, n + 1):
+        mask = np.zeros(n, dtype=bool)
+        mask[:b] = True
+        if np.any(~mask & ~g.offloadable):
+            continue  # would offload a pinned stage
+        cost = g.total_cost(mask)
+        if cost < best_cost:
+            best_b, best_cost = b, cost
+    return best_b, float(best_cost)
+
+
+def plan_placement(
+    stages: Sequence[StageSpec],
+    tier_local: TierSpec,
+    tier_remote: TierSpec,
+    *,
+    backend: str = "reference",
+    exact: bool = False,
+    inter_tier_bw: float | None = None,
+) -> PlacementPlan:
+    """Run the partitioning pass and derive the pipeline plan.
+
+    ``exact=True`` swaps MCOP for the max-flow oracle (beyond-paper exact
+    mode); the default follows the paper.
+    """
+    g = build_stage_wcg(stages, tier_local, tier_remote, inter_tier_bw=inter_tier_bw)
+    if exact:
+        pr = baselines.maxflow_optimal(g)
+        result = MCOPResult(min_cut=pr.cost, local_mask=pr.local_mask, phases=[])
+    else:
+        result = mcop(g, backend=backend)
+        # paper §4.3: "we only actually perform the partitioning when it is
+        # beneficial" — MCOP's phase cuts always offload a non-empty set, so
+        # the all-local plan must be compared explicitly (Fig. 17's partial
+        # curve coinciding with no-offloading at low bandwidth).
+        no_off = baselines.no_offloading(g)
+        if no_off.cost < result.min_cut:
+            result = MCOPResult(
+                min_cut=no_off.cost, local_mask=no_off.local_mask, phases=result.phases
+            )
+    tier = (~result.local_mask).astype(np.int32)
+    boundary, contig_cost = _contiguous_refinement(g)
+
+    cut = result.local_mask[:, None] != result.local_mask[None, :]
+    bw = inter_tier_bw or min(tier_local.link_bw, tier_remote.link_bw)
+    cut_bytes = float((g.adj * cut).sum() / 2.0 * bw)
+
+    return PlacementPlan(
+        stage_tier=tier,
+        mcop_cost=float(result.min_cut),
+        contiguous_boundary=boundary,
+        contiguous_cost=contig_cost,
+        contiguity_penalty=float(contig_cost - result.min_cut),
+        cut_bytes=cut_bytes,
+        result=result,
+    )

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, SyntheticLMDataset, make_batch_shapes

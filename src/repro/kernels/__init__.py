@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Three kernels, each with a pure-jnp oracle in ``ref.py`` and a jit'd
+public wrapper in ``ops.py``:
+
+* ``flash_attention`` — online-softmax attention (causal/full/window, GQA)
+* ``mamba_chunk_scan`` — Mamba2 SSD chunked selective scan
+* ``mcop_phase``       — the paper's MinCutPhase inner loop (MCOP on-device)
+"""
+
+from repro.kernels.ops import flash_attention, mamba_chunk_scan, mcop_min_cut, on_tpu
+from repro.kernels import ref
+
+__all__ = ["flash_attention", "mamba_chunk_scan", "mcop_min_cut", "on_tpu", "ref"]

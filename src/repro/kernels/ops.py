@@ -1,0 +1,160 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+The model code keeps its (B, S, H, hd) layout; these wrappers handle the
+head-major transposes, GQA plumbing, chunk reshapes and interpret-mode
+selection (interpret=True on CPU — this container — and compiled on TPU).
+
+``flash_attention``     — drop-in for models.attention.chunked_attention.
+``mamba_chunk_scan``    — drop-in for the scan core of ssm.mamba2_forward.
+``mcop_min_cut``        — full MCOP built on the mcop_phase kernel: the
+                          phase loop (merging, Eq. 10 bookkeeping) runs in
+                          numpy on host, each phase's O(V²) hot scan runs
+                          in the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.mamba_scan import mamba_chunk_scan_kernel
+from repro.kernels.mcop_phase import mcop_phase_kernel
+
+__all__ = ["flash_attention", "mamba_chunk_scan", "mcop_min_cut", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,   # (B, S, H, hd) — model layout
+    k: jnp.ndarray,   # (B, S, Hkv, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    out = flash_attention_kernel(
+        qh, kh, vh,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba_chunk_scan(
+    x: jnp.ndarray,    # (B, S, H, P)
+    dt: jnp.ndarray,   # (B, S, H)
+    ld: jnp.ndarray,   # (B, S, H) — log decay dt·a
+    bm: jnp.ndarray,   # (B, S, N)
+    cm: jnp.ndarray,   # (B, S, N)
+    h0: jnp.ndarray,   # (B, H, P, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    xk = x.reshape(b, nc, q, h, p).transpose(0, 3, 1, 2, 4)     # (B,H,NC,Q,P)
+    dtk = dt.reshape(b, nc, q, h).transpose(0, 3, 1, 2)         # (B,H,NC,Q)
+    ldk = ld.reshape(b, nc, q, h).transpose(0, 3, 1, 2)
+    bmk = bm.reshape(b, nc, q, n)
+    cmk = cm.reshape(b, nc, q, n)
+    y, hT = mamba_chunk_scan_kernel(
+        xk.astype(jnp.float32),
+        dtk.astype(jnp.float32),
+        ldk.astype(jnp.float32),
+        bmk.astype(jnp.float32),
+        cmk.astype(jnp.float32),
+        h0.astype(jnp.float32),
+        interpret=interpret,
+    )
+    y = y.transpose(0, 2, 3, 1, 4).reshape(b, s, h, p)
+    return y, hT
+
+
+def mcop_min_cut(
+    adj: np.ndarray,
+    w_local: np.ndarray,
+    w_cloud: np.ndarray,
+    offloadable: np.ndarray,
+    *,
+    interpret: bool = True,
+) -> tuple[float, np.ndarray]:
+    """MCOP with the per-phase hot loop on the accelerator.
+
+    Host keeps the graph-surgery (Algorithm 1 merges, Algorithm 2 loop) in
+    numpy — that part is O(V²) total and latency-bound — while each
+    MinCutPhase's O(V²) scan runs in the Pallas kernel.  Returns
+    (min_cut, local_mask over original vertices).
+    """
+    adj = np.array(adj, np.float32)
+    w_local = np.array(w_local, np.float32)
+    w_cloud = np.array(w_cloud, np.float32)
+    n = adj.shape[0]
+    alive = np.ones(n, bool)
+    members = [{i} for i in range(n)]
+    c_total = float(w_local.sum())
+
+    # merge unoffloadables into the anchor
+    pinned = np.nonzero(~np.asarray(offloadable, bool))[0]
+    src = int(pinned[0]) if pinned.size else 0
+
+    def merge(s: int, t: int) -> None:
+        adj[s, :] += adj[t, :]
+        adj[:, s] += adj[:, t]
+        adj[s, s] = 0.0
+        adj[t, :] = 0.0
+        adj[:, t] = 0.0
+        w_local[s] += w_local[t]
+        w_cloud[s] += w_cloud[t]
+        members[s] |= members[t]
+        members[t] = set()
+        alive[t] = False
+
+    for other in pinned[1:]:
+        merge(src, int(other))
+
+    best_cut, best_cloud = np.inf, frozenset()
+    while alive.sum() > 1:
+        cut, s, t = mcop_phase_kernel(
+            jnp.asarray(adj),
+            jnp.asarray(w_local - w_cloud),
+            jnp.asarray(alive.astype(np.float32)),
+            src,
+            c_total,
+            interpret=interpret,
+        )
+        cut, s, t = float(cut), int(s), int(t)
+        if cut < best_cut:
+            best_cut = cut
+            best_cloud = frozenset(members[t])
+        if s != t:
+            merge(s, t)
+            if t == src:
+                src = s
+        else:  # degenerate single-alive-vertex phase
+            break
+
+    local_mask = np.ones(n, bool)
+    for i in best_cloud:
+        local_mask[i] = False
+    return best_cut, local_mask

@@ -1,0 +1,38 @@
+"""Production mesh builders.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import; everything else sees the real device count).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh", "POD_CHIPS"]
+
+POD_CHIPS = 256  # one v5e pod = 16×16
+
+
+def _mk(shape, axes) -> Mesh:
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 single pod, or 2×16×16 across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_local_mesh(*, data: int | None = None, model: int = 1) -> Mesh:
+    """Mesh over whatever devices actually exist (tests / examples)."""
+    n = jax.device_count()
+    if data is None:
+        data = n // model
+    assert data * model == n, (data, model, n)
+    return _mk((data, model), ("data", "model"))

@@ -1,0 +1,188 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every dry-run cell.
+
+No device allocation happens here — everything is ``jax.eval_shape``-land.
+For a training cell the specs cover (params, opt_state, batch); for
+prefill/decode cells they cover (params, cache, tokens).  The same
+functions produce the matching NamedShardings so ``dryrun.py`` can lower
+with explicit in/out shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import make_batch_shapes
+from repro.models.transformer import Model, build_model
+from repro.runtime import sharding as shard_lib
+
+__all__ = ["CellSpec", "build_cell"]
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything dryrun needs for one (arch × shape × mesh) cell."""
+
+    model: Model
+    kind: str                  # "train" | "prefill" | "decode"
+    arg_shapes: tuple          # positional ShapeDtypeStructs for step_fn
+    in_shardings: tuple
+    out_shardings: Any
+    step_fn: Any               # callable(*args)
+    donate_argnums: tuple
+
+
+def _params_shapes(model: Model) -> Any:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def _opt_shapes(params_shapes: Any) -> Any:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return dict(
+        mu=jax.tree_util.tree_map(f32, params_shapes),
+        nu=jax.tree_util.tree_map(f32, params_shapes),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    n_micro: int = 1,
+    remat: bool = True,
+    fsdp: bool = True,
+    vocab_chunk: int = 0,
+    cache_prefer: str = "largest",
+) -> CellSpec:
+    from repro.train.optimizer import AdamWConfig, adamw_update
+
+    model = build_model(cfg)
+    model.remat = remat
+    model.vocab_chunk = vocab_chunk
+    p_shapes = _params_shapes(model)
+    p_shard = shard_lib.param_shardings(p_shapes, mesh, fsdp=fsdp is True)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        batch_shapes = make_batch_shapes(cfg, shape.seq_len, shape.global_batch)
+        b_shard = shard_lib.input_shardings(batch_shapes, mesh)
+        o_shapes = _opt_shapes(p_shapes)
+        # fsdp=True → ZeRO-3 (params+moments 2D); "zero1" → params TP-only,
+        # moments 2D-sharded (grads reduce-scatter to the moment layout).
+        o_fsdp = fsdp in (True, "zero1")
+        o_shard = dict(
+            mu=shard_lib.param_shardings(o_shapes["mu"], mesh, fsdp=o_fsdp),
+            nu=shard_lib.param_shardings(o_shapes["nu"], mesh, fsdp=o_fsdp),
+            step=repl,
+        )
+        opt_cfg = AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p, b):
+                loss, _ = model.train_loss(p, b)
+                return loss
+
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                def split(x):
+                    return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+
+                micro = jax.tree_util.tree_map(split, batch)
+
+                def body(carry, mb):
+                    l_acc, g_acc = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, mb)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, x: a + x.astype(jnp.float32) / n_micro, g_acc, g
+                    )
+                    return (l_acc + l / n_micro, g_acc), None
+
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                # unroll follows the layer-scan knob so depth-probe
+                # measurements see every microbatch body too
+                from repro.models import transformer as _tf
+
+                (loss, grads), _ = jax.lax.scan(
+                    body, (jnp.zeros((), jnp.float32), zeros), micro,
+                    unroll=_tf._LAYER_SCAN_UNROLL,
+                )
+            params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+            return params, opt_state, loss, om["grad_norm"]
+
+        return CellSpec(
+            model=model,
+            kind="train",
+            arg_shapes=(p_shapes, o_shapes, batch_shapes),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, repl, repl),
+            step_fn=train_step,
+            donate_argnums=(0, 1),
+        )
+
+    # ---------------- serving cells -----------------------------------
+    bsz = shape.global_batch
+    if shape.kind == "prefill":
+        batch_shapes = make_batch_shapes(cfg, shape.seq_len, bsz)
+        batch_shapes.pop("labels")
+        b_shard = shard_lib.input_shardings(batch_shapes, mesh)
+        cache_shapes = jax.eval_shape(lambda: model.init_cache(bsz, shape.seq_len))
+        c_shard = shard_lib.state_shardings(cache_shapes, mesh, batch_size=bsz, prefer=cache_prefer)
+
+        def prefill_step(params, batch, cache):
+            logits, cache = model.prefill(params, batch, cache)
+            return logits, cache
+
+        return CellSpec(
+            model=model,
+            kind="prefill",
+            arg_shapes=(p_shapes, batch_shapes, cache_shapes),
+            in_shardings=(p_shard, b_shard, c_shard),
+            out_shardings=(
+                shard_lib.input_shardings(
+                    jax.ShapeDtypeStruct((bsz, cfg.vocab_size), jnp.float32), mesh
+                ),
+                c_shard,
+            ),
+            step_fn=prefill_step,
+            donate_argnums=(2,),
+        )
+
+    # decode: one new token against a cache of seq_len
+    max_len = shape.seq_len
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(bsz, max_len))
+    c_shard = shard_lib.state_shardings(cache_shapes, mesh, batch_size=bsz, prefer=cache_prefer)
+    tok_shapes = jax.ShapeDtypeStruct((bsz, 1), jnp.int32)
+    t_shard = shard_lib.input_shardings(tok_shapes, mesh)
+    extras = {}
+    if cfg.rope_variant == "mrope":
+        extras["positions"] = jax.ShapeDtypeStruct((bsz, 1, 3), jnp.int32)
+    e_shard = shard_lib.input_shardings(extras, mesh)
+
+    def decode_step(params, tokens, cache, extras):
+        logits, cache = model.decode_step(params, tokens, cache, extras)
+        return logits, cache
+
+    return CellSpec(
+        model=model,
+        kind="decode",
+        arg_shapes=(p_shapes, tok_shapes, cache_shapes, extras),
+        in_shardings=(p_shard, t_shard, c_shard, e_shard),
+        out_shardings=(
+            shard_lib.input_shardings(
+                jax.ShapeDtypeStruct((bsz, cfg.vocab_size), jnp.float32), mesh
+            ),
+            c_shard,
+        ),
+        step_fn=decode_step,
+        donate_argnums=(2,),
+    )

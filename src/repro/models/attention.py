@@ -1,0 +1,524 @@
+"""Attention variants: GQA (with qk_norm / bias / M-RoPE options) and
+DeepSeek-V2 MLA (multi-head latent attention), plus a memory-bounded
+chunked ("flash-style") jnp attention used for long prefills.
+
+The chunked jnp implementation is also the numerical oracle for the Pallas
+flash kernel in ``repro/kernels`` — same online-softmax recurrence, pure
+jnp.  The model forward uses the jnp paths (they are what the multi-pod
+dry-run compiles); the Pallas kernel is the TPU-target drop-in validated
+separately in interpret mode.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import common
+from repro.models.common import Params, linear, rmsnorm
+
+__all__ = [
+    "KVCache",
+    "init_attention",
+    "attention_forward",
+    "init_mla",
+    "mla_forward",
+    "naive_attention",
+    "chunked_attention",
+    "set_decode_flash_partitioning",
+]
+
+NEG_INF = -2.0**30
+
+# §Perf knob: when True, decode attention is computed sequence-sharded
+# ("flash-decoding"): q is replicated over the TP axis (it is tiny — one
+# token), scores/softmax/PV stay local to each sequence shard of the KV
+# cache, and only the per-token output + softmax stats are all-reduced.
+# This removes the S→heads cache reshard (XLA's "involuntary full
+# rematerialization") that otherwise streams the whole cache per step.
+_DECODE_FLASH_PARTITION = False
+
+
+def set_decode_flash_partitioning(on: bool) -> None:
+    global _DECODE_FLASH_PARTITION
+    _DECODE_FLASH_PARTITION = on
+
+
+def _ambient_axes():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return None, None
+        ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        tp = "model" if "model" in mesh.axis_names else None
+        return (ba or None), tp
+    except Exception:  # pragma: no cover
+        return None, None
+
+
+def _constrain(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:  # pragma: no cover — no ambient mesh
+        return x
+
+
+def _flash_decode_attention(
+    q: jnp.ndarray,        # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S_max, Hkv, hd) — sequence-sharded over TP
+    v_cache: jnp.ndarray,
+    new_len: jnp.ndarray,
+    *,
+    scale: float,
+) -> jnp.ndarray:
+    """Sequence-sharded GQA decode ("flash-decoding" layout).
+
+    The naive path repeats K/V to H query heads — a broadcast the SPMD
+    partitioner can only realise by resharding (replicating!) the cache
+    S-shards into a head-sharded layout, which streams the entire cache
+    through HBM every step.  Here the grouped-query einsum consumes the
+    cache in its stored (batch, SEQ-sharded) layout; only the softmax
+    statistics and the (B,1,H,hd) output cross the TP axis.
+    """
+    b, s1, h, hd = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    ba, tp = _ambient_axes()
+    qg = q.reshape(b, s1, hkv, g, hd)
+    if ba or tp:
+        qg = _constrain(qg, ba, None, None, None, None)
+        k_cache = _constrain(k_cache, ba, tp, None, None)
+        v_cache = _constrain(v_cache, ba, tp, None, None)
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale                                             # (B, kv, g, 1, S)
+    if ba or tp:
+        scores = _constrain(scores, ba, None, None, None, tp)
+    s_max = k_cache.shape[1]
+    valid = jnp.arange(s_max) < new_len
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)              # stats all-reduce over tp
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache.astype(jnp.float32))
+    out = out.reshape(b, s1, h, hd).astype(q.dtype)
+    if ba or tp:
+        out = _constrain(out, ba, None, None, None)
+    return out
+
+
+class KVCache(NamedTuple):
+    """Per-layer decode cache.  k/v: (B, S_max, n_kv, hd); length: scalar."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    length: jnp.ndarray  # int32 scalar — tokens already cached
+
+
+# ----------------------------------------------------------------------
+# Core attention math
+# ----------------------------------------------------------------------
+
+
+def _mask_bias(
+    mask_kind: str,
+    q_pos: jnp.ndarray,  # (Sq,) absolute positions of queries
+    k_pos: jnp.ndarray,  # (Sk,)
+    window: int | None = None,
+) -> jnp.ndarray:
+    """(Sq, Sk) additive bias in float32."""
+    if mask_kind == "full":
+        bias = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    elif mask_kind == "causal":
+        bias = jnp.where(k_pos[None, :] <= q_pos[:, None], 0.0, NEG_INF)
+    else:
+        raise ValueError(mask_kind)
+    if window is not None:
+        bias = jnp.where(k_pos[None, :] > q_pos[:, None] - window, bias, NEG_INF)
+    return bias
+
+
+def naive_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Sk, Hkv, hd)
+    v: jnp.ndarray,  # (B, Sk, Hkv, hd)
+    *,
+    mask_kind: str = "causal",
+    q_pos: jnp.ndarray | None = None,
+    k_pos: jnp.ndarray | None = None,
+    kv_valid_len: jnp.ndarray | None = None,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Reference attention — materialises the (Sq, Sk) score matrix."""
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if q_pos is None:
+        q_pos = jnp.arange(sq)
+    if k_pos is None:
+        k_pos = jnp.arange(k.shape[1])
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) * scale
+    scores = scores + _mask_bias(mask_kind, q_pos, k_pos, window)[None, None]
+    if kv_valid_len is not None:
+        valid = jnp.arange(k.shape[1]) < kv_valid_len
+        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    mask_kind: str = "causal",
+    chunk_q: int = 1024,
+    chunk_k: int = 1024,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention in pure jnp.
+
+    Peak live memory is O(chunk_q · chunk_k) scores + O(chunk_q · hd)
+    accumulators instead of O(Sq · Sk) — the path long prefills compile
+    through.  Numerics match :func:`naive_attention` to float32 rounding
+    (property-tested).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    pad_q = (-sq) % chunk_q
+    pad_k = (-sk) % chunk_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // chunk_q, kp.shape[1] // chunk_k
+
+    # (nq, B, cq, H, hd) — scan over query chunks
+    q_chunks = qp.reshape(b, nq, chunk_q, h, hd).transpose(1, 0, 2, 3, 4)
+    k_chunks = kp.reshape(b, nk, chunk_k, hkv, hd).transpose(1, 0, 2, 3, 4)
+    v_chunks = vp.reshape(b, nk, chunk_k, hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx
+        q_pos = iq * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(carry, kv_and_idx):
+            acc, m, l = carry
+            (ki, vi), ik = kv_and_idx
+            k_pos = ik * chunk_k + jnp.arange(chunk_k)
+            kr = jnp.repeat(ki, rep, axis=2)
+            vr = jnp.repeat(vi, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kr).astype(jnp.float32) * scale
+            s = s + _mask_bias(mask_kind, q_pos, k_pos, window)[None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vr.astype(jnp.float32)
+            )
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, chunk_q, hd), jnp.float32)
+        m0 = jnp.full((b, h, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, chunk_q), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), ((k_chunks, v_chunks), jnp.arange(nk))
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)  # (B, H, cq, hd)
+
+    _, outs = jax.lax.scan(q_step, None, (q_chunks, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nq * chunk_q, h, hd)
+    return out[:, :sq]
+
+
+# ----------------------------------------------------------------------
+# GQA attention layer
+# ----------------------------------------------------------------------
+
+
+def init_attention(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    dt = common.dtype_of(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    p: Params = {
+        "wq": common.dense_init(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wk": common.dense_init(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wv": common.dense_init(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wo": common.dense_init(ks[3], cfg.n_heads * hd, d, dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = common.rmsnorm_init(hd)
+        p["k_norm"] = common.rmsnorm_init(hd)
+    return p
+
+
+def _positions_for(cfg: ModelConfig, pos: jnp.ndarray) -> jnp.ndarray:
+    """Expand (B, S) int positions to M-RoPE (B, S, 3) when needed."""
+    if cfg.rope_variant == "mrope" and pos.ndim == 2:
+        return jnp.broadcast_to(pos[..., None], (*pos.shape, 3))
+    return pos
+
+
+def attention_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,                    # (B, S, d)
+    *,
+    positions: jnp.ndarray,            # (B, S) or (B, S, 3) for mrope
+    cache: KVCache | None = None,
+    mask_kind: str = "causal",
+    window: int | None = None,
+    kv_source: jnp.ndarray | None = None,   # cross-attention memory
+    use_chunked: bool = False,
+    ring: bool = False,                # sliding-window cache is a ring buffer
+) -> tuple[jnp.ndarray, KVCache | None]:
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    kv_in = x if kv_source is None else kv_source
+    sk = kv_in.shape[1]
+    k = linear(p["wk"], kv_in).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], kv_in).reshape(b, sk, cfg.n_kv_heads, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, eps=cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, eps=cfg.norm_eps)
+
+    if cfg.rope_variant != "none" and kv_source is None:
+        pos = _positions_for(cfg, positions)
+        if cfg.rope_variant == "mrope":
+            q = common.apply_mrope(q, pos, cfg.rope_theta, cfg.mrope_sections)
+            k = common.apply_mrope(k, pos, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = common.apply_rope(q, pos, cfg.rope_theta)
+            k = common.apply_rope(k, pos, cfg.rope_theta)
+
+    new_cache = None
+    if (
+        cache is not None
+        and kv_source is None
+        and not ring
+        and s == 1
+        and window is None
+        and _DECODE_FLASH_PARTITION
+    ):
+        # flash-decoding: consume the cache in its sequence-sharded layout
+        k_cache = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0)
+        )
+        new_len = cache.length + s
+        new_cache = KVCache(k_cache, v_cache, new_len)
+        out = _flash_decode_attention(
+            q, k_cache, v_cache, new_len, scale=1.0 / math.sqrt(hd)
+        )
+        out = out.reshape(b, s, cfg.n_heads * hd)
+        return linear(p["wo"], out), new_cache
+    if cache is not None and ring and kv_source is None:
+        # --- sliding-window ring cache -------------------------------
+        # slot of absolute position p is p % w.  The ring always holds
+        # the last min(L, w) tokens after the write.
+        w = cache.k.shape[1]
+        q_pos = cache.length + jnp.arange(s)
+        if s > w:  # only the last w tokens survive the write
+            k_w, v_w, pos_w = k[:, -w:], v[:, -w:], q_pos[-w:]
+        else:
+            k_w, v_w, pos_w = k, v, q_pos
+        slots = pos_w % w
+        k_cache = cache.k.at[:, slots].set(k_w.astype(cache.k.dtype))
+        v_cache = cache.v.at[:, slots].set(v_w.astype(cache.v.dtype))
+        new_len = cache.length + s
+        new_cache = KVCache(k_cache, v_cache, new_len)
+        if s == 1:
+            # decode: attend the ring.  Slot j holds absolute position
+            # L−1−((L−1−j) mod w); unwritten slots map negative → masked
+            # by pushing them past the query (causal kills them).
+            j = jnp.arange(w)
+            k_pos = new_len - 1 - ((new_len - 1 - j) % w)
+            k_pos = jnp.where(k_pos >= 0, k_pos, jnp.int32(2**30))
+            out = naive_attention(
+                q, k_cache, v_cache, mask_kind="causal",
+                q_pos=q_pos, k_pos=k_pos, window=w,
+            )
+        else:
+            # prefill: exact windowed attention over the fresh k/v (the
+            # ring is a decode artifact; early tokens must still see
+            # their full in-window history, which a ring overwrites)
+            attn = chunked_attention if use_chunked else naive_attention
+            out = attn(q, k, v, mask_kind="causal", window=w)
+        out = out.reshape(b, s, cfg.n_heads * hd)
+        return linear(p["wo"], out), new_cache
+    if cache is not None:
+        if kv_source is None:
+            # append this step's k/v at cache.length
+            k_cache = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0)
+            )
+            new_len = cache.length + s
+            new_cache = KVCache(k_cache, v_cache, new_len)
+            q_pos = cache.length + jnp.arange(s)
+            out = naive_attention(
+                q, k_cache, v_cache,
+                mask_kind="causal",
+                q_pos=q_pos,
+                k_pos=jnp.arange(k_cache.shape[1]),
+                kv_valid_len=new_len,
+                window=window,
+            )
+        else:
+            # cross-attention with a fixed memory: cache holds projected k/v
+            out = naive_attention(q, cache.k, cache.v, mask_kind="full")
+            new_cache = cache
+    else:
+        attn = chunked_attention if use_chunked else naive_attention
+        out = attn(q, k, v, mask_kind=mask_kind, window=window)
+
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return linear(p["wo"], out), new_cache
+
+
+# ----------------------------------------------------------------------
+# MLA (DeepSeek-V2) — compressed-KV latent attention
+# ----------------------------------------------------------------------
+
+
+class MLACache(NamedTuple):
+    """Decode cache holds the *compressed* latents (the whole point of MLA).
+
+    c_kv:   (B, S_max, kv_lora_rank)
+    k_rope: (B, S_max, qk_rope_head_dim)
+    length: int32 scalar
+    """
+
+    c_kv: jnp.ndarray
+    k_rope: jnp.ndarray
+    length: jnp.ndarray
+
+
+def init_mla(rng, cfg: ModelConfig) -> Params:
+    m = cfg.mla or MLAConfig()
+    d = cfg.d_model
+    dt = common.dtype_of(cfg.dtype)
+    ks = jax.random.split(rng, 6)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": common.dense_init(ks[0], d, m.q_lora_rank, dtype=dt),
+        "q_norm": common.rmsnorm_init(m.q_lora_rank),
+        "w_uq": common.dense_init(ks[1], m.q_lora_rank, cfg.n_heads * qk_head, dtype=dt),
+        "w_dkv": common.dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype=dt),
+        "kv_norm": common.rmsnorm_init(m.kv_lora_rank),
+        "w_uk": common.dense_init(ks[3], m.kv_lora_rank, cfg.n_heads * m.qk_nope_head_dim, dtype=dt),
+        "w_uv": common.dense_init(ks[4], m.kv_lora_rank, cfg.n_heads * m.v_head_dim, dtype=dt),
+        "wo": common.dense_init(ks[5], cfg.n_heads * m.v_head_dim, d, dtype=dt),
+    }
+
+
+def _mla_compress(cfg: ModelConfig, p: Params, x: jnp.ndarray):
+    """x → (c_kv normalised, k_rope rotated later)."""
+    m = cfg.mla or MLAConfig()
+    ckv_full = linear(p["w_dkv"], x)
+    c_kv = rmsnorm(p["kv_norm"], ckv_full[..., : m.kv_lora_rank], eps=cfg.norm_eps)
+    k_rope = ckv_full[..., m.kv_lora_rank :]
+    return c_kv, k_rope
+
+
+def _mla_queries(cfg: ModelConfig, p: Params, x: jnp.ndarray, positions):
+    m = cfg.mla or MLAConfig()
+    b, s, _ = x.shape
+    q = linear(p["w_uq"], rmsnorm(p["q_norm"], linear(p["w_dq"], x), eps=cfg.norm_eps))
+    q = q.reshape(b, s, cfg.n_heads, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = common.apply_rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,
+    *,
+    positions: jnp.ndarray,
+    cache: MLACache | None = None,
+    use_chunked: bool = False,
+) -> tuple[jnp.ndarray, MLACache | None]:
+    """MLA attention.
+
+    Prefill/train: decompress K/V (standard formulation).  Decode: the
+    *absorbed* formulation — queries are mapped into latent space and
+    attention runs directly against the compressed cache, so per-step cost
+    scales with kv_lora_rank (512) instead of n_heads·head_dim (16384):
+    the 32× KV-bandwidth saving that makes MLA decode-friendly.
+    """
+    m = cfg.mla or MLAConfig()
+    b, s, _ = x.shape
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = _mla_queries(cfg, p, x, positions)
+    c_kv, k_rope_raw = _mla_compress(cfg, p, x)
+
+    if cache is None:
+        # --- decompressed path (train / prefill-without-cache) ----------
+        k_pos = jnp.arange(s)
+        k_rope = common.apply_rope(k_rope_raw[:, :, None, :], k_pos[None, :], cfg.rope_theta)
+        k_nope = linear(p["w_uk"], c_kv).reshape(b, s, cfg.n_heads, m.qk_nope_head_dim)
+        val = linear(p["w_uv"], c_kv).reshape(b, s, cfg.n_heads, m.v_head_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, cfg.n_heads, m.qk_rope_head_dim))],
+            axis=-1,
+        )
+        attn = chunked_attention if use_chunked else naive_attention
+        out = attn(q, k, val, mask_kind="causal", scale=scale)
+        out = out.reshape(b, s, cfg.n_heads * m.v_head_dim)
+        return linear(p["wo"], out), None
+
+    # --- absorbed decode path -------------------------------------------
+    pos = cache.length + jnp.arange(s)
+    k_rope = common.apply_rope(k_rope_raw[:, :, None, :], pos[None, :], cfg.rope_theta)[:, :, 0]
+    c_cache = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache.length, 0)
+    )
+    r_cache = jax.lax.dynamic_update_slice(
+        cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, cache.length, 0)
+    )
+    new_len = cache.length + s
+    new_cache = MLACache(c_cache, r_cache, new_len)
+
+    # absorb W_UK into q: q_lat (B,S,H,kv_lora) = q_nope @ W_UK(head)ᵀ
+    w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, cfg.n_heads, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+    s_max = c_cache.shape[1]
+    scores = (
+        jnp.einsum("bshr,bkr->bhsk", q_lat, c_cache)
+        + jnp.einsum("bshd,bkd->bhsk", q_rope, r_cache)
+    ).astype(jnp.float32) * scale
+    k_positions = jnp.arange(s_max)
+    causal = k_positions[None, None, None, :] <= (cache.length + jnp.arange(s))[None, None, :, None]
+    valid = k_positions[None, None, None, :] < new_len
+    scores = jnp.where(causal & valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    # attend in latent space, then decompress once per query token
+    lat = jnp.einsum("bhsk,bkr->bshr", probs, c_cache)
+    w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)
+    out = jnp.einsum("bshr,rhd->bshd", lat, w_uv)
+    out = out.reshape(b, s, cfg.n_heads * m.v_head_dim)
+    return linear(p["wo"], out), new_cache

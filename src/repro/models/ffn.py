@@ -1,0 +1,147 @@
+"""Feed-forward layers: dense SwiGLU and Mixture-of-Experts.
+
+The MoE uses capacity-bounded *sort-based dispatch* (megablocks-style
+rather than GShard one-hot einsums): tokens are sorted by expert id,
+scattered into an (E, C, d) buffer, processed with a batched expert
+matmul (MXU-friendly ``(E, C, d) × (E, d, f)``), and scattered back with
+their gate weights.  This avoids the O(T·E·C) one-hot dispatch tensor —
+at deepseek-v2 scale (T=65k tokens/shard, E=160, C≈3k) the one-hot tensor
+alone would be ~3·10¹³ elements; sort dispatch keeps memory at
+O(T·k + E·C·d).
+
+Under pjit, sharding experts over the ``model`` mesh axis makes XLA insert
+the token all-to-alls at the (T, d)→(E, C, d) and back reshardings —
+expert parallelism falls out of the sharding annotations, matching how the
+dry-run measures its collective bytes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import common
+from repro.models.common import Params, linear
+
+__all__ = [
+    "init_swiglu",
+    "swiglu_forward",
+    "init_moe",
+    "moe_forward",
+]
+
+
+def init_swiglu(rng, d_model: int, d_ff: int, *, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": common.dense_init(k1, d_model, d_ff, dtype=dtype),
+        "w_up": common.dense_init(k2, d_model, d_ff, dtype=dtype),
+        "w_down": common.dense_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu_forward(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(p["w_down"], jax.nn.silu(linear(p["w_gate"], x)) * linear(p["w_up"], x))
+
+
+# ----------------------------------------------------------------------
+# Mixture of Experts
+# ----------------------------------------------------------------------
+
+
+def init_moe(rng, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    assert m is not None
+    d = cfg.d_model
+    dt = common.dtype_of(cfg.dtype)
+    k_router, k_experts, k_shared = jax.random.split(rng, 3)
+
+    def stacked(rng, n, d_in, d_out):
+        keys = jax.random.split(rng, n)
+        return jnp.stack([common.dense_init(k, d_in, d_out, dtype=dt)["w"] for k in keys])
+
+    ke = jax.random.split(k_experts, 3)
+    p: Params = {
+        "router": common.dense_init(k_router, d, m.num_experts, dtype=jnp.float32),
+        "w_gate": stacked(ke[0], m.num_experts, d, m.d_ff_expert),
+        "w_up": stacked(ke[1], m.num_experts, d, m.d_ff_expert),
+        "w_down": stacked(ke[2], m.num_experts, m.d_ff_expert, d),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_swiglu(
+            k_shared, d, m.num_shared_experts * m.d_ff_shared, dtype=dt
+        )
+    return p
+
+
+def _capacity(m: MoEConfig, n_tokens: int) -> int:
+    cap = int(n_tokens * m.top_k * m.capacity_factor / m.num_experts) + 1
+    # round up to an MXU-aligned multiple where it matters
+    return max(8, -(-cap // 8) * 8)
+
+
+def moe_forward(
+    cfg: ModelConfig, p: Params, x: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output, aux_loss).  x: (B, S, d) → flattened internally."""
+    m = cfg.moe
+    assert m is not None
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    # --- routing (float32 for a stable softmax) -------------------------
+    logits = linear(p["router"], xf.astype(jnp.float32))           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)                                        # (E,)
+    one_hot_top1 = jax.nn.one_hot(expert_ids[:, 0], m.num_experts)
+    ce = one_hot_top1.mean(axis=0)
+    aux = m.num_experts * jnp.sum(me * ce) * m.aux_loss_weight
+
+    # --- sort-based dispatch --------------------------------------------
+    cap = _capacity(m, t)
+    flat_expert = expert_ids.reshape(-1)                           # (T·k,)
+    flat_token = jnp.repeat(jnp.arange(t), m.top_k)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    # position of each routed token within its expert's block: the array is
+    # sorted by expert, so position = global index − segment start.
+    seg_start = jnp.searchsorted(sorted_expert, jnp.arange(m.num_experts), side="left")
+    pos_in_expert = jnp.arange(t * m.top_k) - seg_start[sorted_expert]
+    keep = pos_in_expert < cap                                     # capacity drop
+    slot = sorted_expert * cap + jnp.where(keep, pos_in_expert, 0)
+
+    # scatter token features into (E·C, d); dropped tokens write nowhere
+    buf = jnp.zeros((m.num_experts * cap, d), x.dtype)
+    src = jnp.where(keep[:, None], xf[sorted_token], 0.0)
+    buf = buf.at[jnp.where(keep, slot, m.num_experts * cap - 1)].add(
+        jnp.where(keep[:, None], src, 0.0)
+    )
+    buf = buf.reshape(m.num_experts, cap, d)
+
+    # --- expert computation: batched matmuls (E, C, d) × (E, d, f) ------
+    h_gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    h_up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jax.nn.silu(h_gate) * h_up
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(-1, d)
+
+    # --- combine: gather back, weight by gates, scatter-add to tokens ---
+    gathered = jnp.where(keep[:, None], out_buf[slot], 0.0)
+    combined = jnp.zeros((t, d), x.dtype)
+    combined = combined.at[sorted_token].add(
+        gathered * sorted_gate[:, None].astype(x.dtype)
+    )
+
+    if "shared" in p:
+        combined = combined + swiglu_forward(p["shared"], xf)
+    return combined.reshape(b, s, d), aux

@@ -1,0 +1,435 @@
+"""State-space & recurrent sequence mixers: Mamba2 (SSD) and xLSTM blocks.
+
+Mamba2 uses the chunked SSD formulation: quadratic attention-like compute
+*within* fixed-size chunks (MXU-friendly batched matmuls) plus a sequential
+inter-chunk state recurrence — O(S·Q) instead of O(S²).  A step-by-step
+recurrence (`mamba2_step`) serves decode and doubles as the numerical
+oracle in tests (chunked ≡ sequential, property-tested).
+
+xLSTM: mLSTM (matrix memory, exponentially gated, fully parallelizable
+à la linear attention — implemented here as a stabilized sequential scan
+with a chunked variant in ``repro/kernels``) and sLSTM (scalar memory with
+recurrent block-diagonal weights — inherently sequential).  Both carry
+O(d²) state per layer, which is what makes the 500k-token decode cell
+feasible where full attention is not.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import Params, linear
+
+__all__ = [
+    "MambaState",
+    "init_mamba2",
+    "mamba2_forward",
+    "mamba2_step",
+    "XLSTMState",
+    "init_mlstm",
+    "mlstm_forward",
+    "mlstm_step",
+    "init_slstm",
+    "slstm_forward",
+    "slstm_step",
+]
+
+
+# ======================================================================
+# Mamba2
+# ======================================================================
+
+
+class MambaState(NamedTuple):
+    """Decode state: SSM state h (B, H, P, N) + conv ring buffer."""
+
+    h: jnp.ndarray          # (B, H, P, N) float32
+    conv: jnp.ndarray       # (B, conv_w - 1, d_conv_in)
+
+
+def _mamba_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.mamba_headdim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_mamba2(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner, n_heads, n_state = _mamba_dims(cfg)
+    dt = common.dtype_of(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    d_in_proj = 2 * d_inner + 2 * n_state + n_heads   # z, x, B, C, dt
+    d_conv_in = d_inner + 2 * n_state                 # conv over [x, B, C]
+    return {
+        "in_proj": common.dense_init(ks[0], d, d_in_proj, dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_conv_in), jnp.float32)
+                   * (1.0 / math.sqrt(cfg.ssm_conv))).astype(dt),
+        "conv_b": jnp.zeros((d_conv_in,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": common.rmsnorm_init(d_inner),
+        "out_proj": common.dense_init(ks[3], d_inner, d, dtype=dt),
+    }
+
+
+def _mamba_project(cfg: ModelConfig, p: Params, x: jnp.ndarray):
+    """Shared input path: projections + causal conv + gate computation."""
+    d_inner, n_heads, n_state = _mamba_dims(cfg)
+    zxbcdt = linear(p["in_proj"], x)
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * n_state], axis=-1
+    )
+    return z, xbc, dt_raw
+
+
+def _causal_conv(
+    p: Params,
+    xbc: jnp.ndarray,
+    conv_state: jnp.ndarray | None,
+    valid_len: int | None = None,
+):
+    """Depthwise causal conv over time.  xbc: (B, S, C).
+
+    ``valid_len`` (static) marks the number of real tokens when the caller
+    right-padded the sequence; the returned conv state then holds the last
+    K−1 *real* inputs so decode continues seamlessly after a padded prefill.
+    """
+    w = p["conv_w"]  # (K, C)
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)            # (B, S+K-1, C)
+    out = sum(xp[:, i : i + xbc.shape[1]] * w[i].astype(xbc.dtype) for i in range(k))
+    out = jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+    if k > 1:
+        if valid_len is not None and valid_len != xbc.shape[1]:
+            new_state = jax.lax.dynamic_slice_in_dim(xp, valid_len, k - 1, axis=1)
+        else:
+            new_state = xp[:, -(k - 1):]
+    else:
+        new_state = pad
+    return out, new_state
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jnp.ndarray):
+    d_inner, n_heads, n_state = _mamba_dims(cfg)
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + n_state], axis=-1)
+    return xs, b, c
+
+
+def mamba2_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,                       # (B, S, d)
+    state: MambaState | None = None,
+) -> tuple[jnp.ndarray, MambaState]:
+    """Chunked SSD over a full sequence.  Returns output + final state.
+
+    Sequences that don't divide the chunk are right-padded internally;
+    padded steps get dt = 0 (no decay, no input contribution), so the
+    final state is exactly the state after the real tokens.
+    """
+    bsz, s_in, _ = x.shape
+    d_inner, n_heads, n_state = _mamba_dims(cfg)
+    hd = cfg.mamba_headdim
+    q = min(cfg.ssm_chunk, s_in)
+    pad = (-s_in) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s = s_in + pad
+    n_chunks = s // q
+
+    z, xbc, dt_raw = _mamba_project(cfg, p, x)
+    conv_in_state = state.conv if state is not None else None
+    xbc, conv_state = _causal_conv(p, xbc, conv_in_state, valid_len=s_in)
+    xs, b, c = _split_xbc(cfg, xbc)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    if pad:
+        dt = dt * (jnp.arange(s) < s_in)[None, :, None]
+    a = -jnp.exp(p["a_log"])                                          # (H,)
+    log_decay = dt * a                                                # (B,S,H)
+
+    xh = xs.reshape(bsz, n_chunks, q, n_heads, hd).astype(jnp.float32)
+    bh = b.reshape(bsz, n_chunks, q, n_state).astype(jnp.float32)
+    ch = c.reshape(bsz, n_chunks, q, n_state).astype(jnp.float32)
+    dth = dt.reshape(bsz, n_chunks, q, n_heads)
+    ld = log_decay.reshape(bsz, n_chunks, q, n_heads)
+    cum = jnp.cumsum(ld, axis=2)                                      # (B,NC,Q,H)
+
+    # ---- intra-chunk quadratic term ----------------------------------
+    # scores[t, s] = exp(cum_t − cum_s) · (C_t · B_s) · dt_s   for s ≤ t
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]             # (B,NC,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: exp of masked (upper-triangle) entries can overflow
+    # and a post-hoc where() still back-propagates NaN through the inf branch
+    gate = jnp.exp(jnp.where(causal[None, None, :, :, None], decay, -1e30))
+    scores = jnp.einsum("bntk,bnsk->bnts", ch, bh)                    # (B,NC,Q,Q)
+    w = scores[..., None] * gate * dth[:, :, None, :, :]              # (B,NC,Q,Q,H)
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp", w, xh)                 # (B,NC,Q,H,P)
+
+    # ---- inter-chunk recurrence ---------------------------------------
+    # per-chunk input-to-state: S_n = Σ_s exp(cum_end − cum_s)·dt_s·B_s⊗x_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                           # (B,NC,Q,H)
+    contrib = tail * dth                                              # (B,NC,Q,H)
+    chunk_states = jnp.einsum("bnsh,bnsk,bnshp->bnhpk", contrib, bh, xh)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                           # (B,NC,H)
+
+    h0 = (state.h if state is not None
+          else jnp.zeros((bsz, n_heads, hd, n_state), jnp.float32))
+
+    def chunk_step(h, inputs):
+        s_n, g_n = inputs  # (B,H,P,N), (B,H)
+        h_out = h  # state *entering* the chunk
+        h_new = h * g_n[..., None, None] + s_n
+        return h_new, h_out
+
+    (h_final, h_enter) = jax.lax.scan(
+        chunk_step,
+        h0,
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    # y_inter[t] = exp(cum_t) · C_t · h_enter(chunk)
+    h_enter = h_enter.transpose(1, 0, 2, 3, 4)                        # (B,NC,H,P,N)
+    y_inter = jnp.einsum(
+        "bnth,bntk,bnhpk->bnthp", jnp.exp(cum), ch, h_enter
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, s, n_heads, hd)
+    y = y + p["d_skip"][None, None, :, None] * xs.reshape(bsz, s, n_heads, hd).astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = common.rmsnorm(p["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    y = y[:, :s_in] if pad else y
+    return linear(p["out_proj"], y), MambaState(h=h_final, conv=conv_state)
+
+
+def mamba2_step(
+    cfg: ModelConfig, p: Params, x: jnp.ndarray, state: MambaState
+) -> tuple[jnp.ndarray, MambaState]:
+    """Single-token recurrence (decode path / test oracle).  x: (B, 1, d)."""
+    bsz = x.shape[0]
+    d_inner, n_heads, n_state = _mamba_dims(cfg)
+    hd = cfg.mamba_headdim
+
+    z, xbc, dt_raw = _mamba_project(cfg, p, x)
+    xbc, conv_state = _causal_conv(p, xbc, state.conv)
+    xs, b, c = _split_xbc(cfg, xbc)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]   # (B,H)
+    a = -jnp.exp(p["a_log"])
+    g = jnp.exp(dt * a)                                                     # (B,H)
+    xh = xs[:, 0].reshape(bsz, n_heads, hd).astype(jnp.float32)
+    bv = b[:, 0].astype(jnp.float32)                                        # (B,N)
+    cv = c[:, 0].astype(jnp.float32)
+
+    h = state.h * g[..., None, None] + jnp.einsum(
+        "bh,bk,bhp->bhpk", dt, bv, xh
+    )
+    y = jnp.einsum("bk,bhpk->bhp", cv, h) + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = common.rmsnorm(p["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    return linear(p["out_proj"], y), MambaState(h=h, conv=conv_state)
+
+
+# ======================================================================
+# xLSTM — mLSTM (matrix memory)
+# ======================================================================
+
+
+class XLSTMState(NamedTuple):
+    c: jnp.ndarray  # mLSTM: (B, H, P, P) matrix memory | sLSTM: (B, H, P) cell
+    n: jnp.ndarray  # normalizer: (B, H, P) | (B, H, P)
+    m: jnp.ndarray  # stabilizer: (B, H)   | (B, H, P)
+    h: jnp.ndarray  # sLSTM hidden (B, H, P); unused (zeros) for mLSTM
+
+
+def _xlstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    return cfg.n_heads, cfg.d_model // cfg.n_heads
+
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    """mLSTM operates in the up-projected space: (n_heads, up, hd_up)."""
+    up = int(cfg.xlstm_proj_factor * cfg.d_model)
+    return cfg.n_heads, up, up // cfg.n_heads
+
+
+def init_mlstm(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    n_heads, up, hd = _mlstm_dims(cfg)
+    dt = common.dtype_of(cfg.dtype)
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_up": common.dense_init(ks[0], d, up, dtype=dt),       # cell stream
+        "w_gatez": common.dense_init(ks[1], d, up, dtype=dt),    # output gating
+        "wq": common.dense_init(ks[2], up, up, dtype=dt),
+        "wk": common.dense_init(ks[3], up, up, dtype=dt),
+        "wv": common.dense_init(ks[4], up, up, dtype=dt),
+        "w_if": common.dense_init(ks[5], up, 2 * n_heads, dtype=jnp.float32),
+        "norm": common.rmsnorm_init(up),
+        "w_down": common.dense_init(ks[6], up, d, dtype=dt),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, bsz: int) -> XLSTMState:
+    n_heads, up, hd = _mlstm_dims(cfg)
+    return XLSTMState(
+        c=jnp.zeros((bsz, n_heads, hd, hd), jnp.float32),
+        n=jnp.zeros((bsz, n_heads, hd), jnp.float32),
+        m=jnp.full((bsz, n_heads), -1e30, jnp.float32),
+        h=jnp.zeros((bsz, n_heads, hd), jnp.float32),
+    )
+
+
+def _mlstm_inner_step(q, k, v, i_raw, f_raw, state: XLSTMState):
+    """One stabilized mLSTM update.  q/k/v: (B, H, P) f32; gates (B, H)."""
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + state.m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(log_f + state.m - m_new)
+    c = state.c * f_g[..., None, None] + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )
+    n = state.n * f_g[..., None] + i_g[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h, XLSTMState(c=c, n=n, m=m_new, h=state.h)
+
+
+def _mlstm_qkv(cfg, p, x):
+    """x: (B, S, d) → q/k/v in the up-projected head space + gate pre-acts."""
+    bsz, s, d = x.shape
+    n_heads, up, hd = _mlstm_dims(cfg)
+    scale = 1.0 / math.sqrt(hd)
+    u = linear(p["w_up"], x)                                          # (B,S,up)
+    q = linear(p["wq"], u).reshape(bsz, s, n_heads, hd).astype(jnp.float32) * scale
+    k = linear(p["wk"], u).reshape(bsz, s, n_heads, hd).astype(jnp.float32)
+    v = linear(p["wv"], u).reshape(bsz, s, n_heads, hd).astype(jnp.float32)
+    gates = linear(p["w_if"], u.astype(jnp.float32))                  # (B,S,2H)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+    z = jax.nn.silu(linear(p["w_gatez"], x))                          # (B,S,up)
+    return q, k, v, i_raw, f_raw, z
+
+
+def mlstm_forward(
+    cfg: ModelConfig, p: Params, x: jnp.ndarray, state: XLSTMState | None = None
+) -> tuple[jnp.ndarray, XLSTMState]:
+    """Sequential (scan-over-time) mLSTM over a sequence.  x: (B, S, d)."""
+    bsz, s, d = x.shape
+    n_heads, up, hd = _mlstm_dims(cfg)
+    q, k, v, i_raw, f_raw, z = _mlstm_qkv(cfg, p, x)
+    st = state if state is not None else mlstm_init_state(cfg, bsz)
+
+    def step(st, inputs):
+        qt, kt, vt, it, ft = inputs
+        h, st2 = _mlstm_inner_step(qt, kt, vt, it, ft, st)
+        return st2, h
+
+    seq = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        i_raw.transpose(1, 0, 2),
+        f_raw.transpose(1, 0, 2),
+    )
+    st_final, hs = jax.lax.scan(step, st, seq)
+    h = hs.transpose(1, 0, 2, 3).reshape(bsz, s, up).astype(x.dtype)
+    h = common.rmsnorm(p["norm"], h, eps=cfg.norm_eps)
+    return linear(p["w_down"], h * z), st_final
+
+
+def mlstm_step(
+    cfg: ModelConfig, p: Params, x: jnp.ndarray, state: XLSTMState
+) -> tuple[jnp.ndarray, XLSTMState]:
+    """Single-token mLSTM decode step.  x: (B, 1, d)."""
+    bsz, _, d = x.shape
+    n_heads, up, hd = _mlstm_dims(cfg)
+    q, k, v, i_raw, f_raw, z = _mlstm_qkv(cfg, p, x)
+    h, st = _mlstm_inner_step(q[:, 0], k[:, 0], v[:, 0], i_raw[:, 0], f_raw[:, 0], state)
+    h = h.reshape(bsz, 1, up).astype(x.dtype)
+    h = common.rmsnorm(p["norm"], h, eps=cfg.norm_eps)
+    return linear(p["w_down"], h * z), st
+
+
+# ======================================================================
+# xLSTM — sLSTM (scalar memory, recurrent)
+# ======================================================================
+
+
+def init_slstm(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    n_heads, hd = _xlstm_dims(cfg)
+    up = int(cfg.xlstm_proj_factor * d)
+    dt = common.dtype_of(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    # 4 gates (i, f, z, o), each with input weights and block-diagonal
+    # per-head recurrent weights (the xLSTM "memory mixing").
+    return {
+        "w_in": common.dense_init(ks[0], d, 4 * d, dtype=dt),
+        "r": (jax.random.normal(ks[1], (4, n_heads, hd, hd), jnp.float32)
+              / math.sqrt(hd)).astype(jnp.float32),
+        "b": jnp.zeros((4, n_heads, hd), jnp.float32),
+        "norm": common.rmsnorm_init(d),
+        "w_up": common.dense_init(ks[2], d, up, dtype=dt),
+        "w_down": common.dense_init(ks[3], up, d, dtype=dt),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, bsz: int) -> XLSTMState:
+    n_heads, hd = _xlstm_dims(cfg)
+    z = jnp.zeros((bsz, n_heads, hd), jnp.float32)
+    return XLSTMState(c=z, n=z, m=jnp.full((bsz, n_heads, hd), -1e30), h=z)
+
+
+def _slstm_inner_step(cfg, p, xt, state: XLSTMState):
+    """xt: (B, 4, H, P) pre-projected gate inputs."""
+    rec = jnp.einsum("ghvp,bhp->bghv", p["r"], state.h)  # (B,4,H,P)
+    pre = xt.astype(jnp.float32) + rec + p["b"][None]
+    i_raw, f_raw, z_raw, o_raw = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + state.m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(log_f + state.m - m_new)
+    c = f_g * state.c + i_g * jnp.tanh(z_raw)
+    n = f_g * state.n + i_g
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1.0)
+    return h, XLSTMState(c=c, n=n, m=m_new, h=h)
+
+
+def slstm_forward(
+    cfg: ModelConfig, p: Params, x: jnp.ndarray, state: XLSTMState | None = None
+) -> tuple[jnp.ndarray, XLSTMState]:
+    bsz, s, d = x.shape
+    n_heads, hd = _xlstm_dims(cfg)
+    st = state if state is not None else slstm_init_state(cfg, bsz)
+    gates_in = linear(p["w_in"], x).reshape(bsz, s, 4, n_heads, hd)
+
+    def step(st, xt):
+        h, st2 = _slstm_inner_step(cfg, p, xt, st)
+        return st2, h
+
+    st_final, hs = jax.lax.scan(step, st, gates_in.transpose(1, 0, 2, 3, 4))
+    h = hs.transpose(1, 0, 2, 3).reshape(bsz, s, d).astype(x.dtype)
+    h = common.rmsnorm(p["norm"], h, eps=cfg.norm_eps)
+    return linear(p["w_down"], jax.nn.gelu(linear(p["w_up"], h))), st_final
+
+
+def slstm_step(
+    cfg: ModelConfig, p: Params, x: jnp.ndarray, state: XLSTMState
+) -> tuple[jnp.ndarray, XLSTMState]:
+    bsz, _, d = x.shape
+    n_heads, hd = _xlstm_dims(cfg)
+    xt = linear(p["w_in"], x).reshape(bsz, 4, n_heads, hd)
+    h, st = _slstm_inner_step(cfg, p, xt, state)
+    h = h.reshape(bsz, 1, d).astype(x.dtype)
+    h = common.rmsnorm(p["norm"], h, eps=cfg.norm_eps)
+    return linear(p["w_down"], jax.nn.gelu(linear(p["w_up"], h))), st

@@ -1,0 +1,776 @@
+"""Model assembly for every assigned architecture family.
+
+One :class:`Model` facade per config exposes:
+
+* ``init(rng)``            — parameter pytree (works under ``jax.eval_shape``)
+* ``train_loss(params, batch)``  — mean token NLL (+ MoE aux losses)
+* ``init_cache(batch, max_len)`` — decode-cache pytree
+* ``prefill(params, batch, cache)`` — run the prompt, fill the cache
+* ``decode_step(params, tokens, cache)`` — one token with the cache
+
+Depth is always consumed with ``jax.lax.scan`` over stacked layer
+parameters, so compiled HLO size — and 512-device dry-run compile time —
+is independent of layer count.  Heterogeneous stacks (zamba2's shared
+attention cadence, xlstm's sLSTM cadence) scan over *groups* whose body
+contains the repeating pattern.
+
+Frontends for ``[vlm]``/``[audio]`` archs are stubs per the assignment:
+precomputed patch/frame embeddings arrive in the batch and are spliced
+into the token embedding stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import common, ffn, ssm
+from repro.models.common import Params, linear, rmsnorm
+
+__all__ = ["Model", "build_model"]
+
+REMAT_POLICY = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+# Layer-scan unroll factor.  1 = rolled while-loop (small HLO — the normal
+# mode).  True/int = unrolled bodies; the dry-run's depth-probe measurements
+# use full unroll so XLA cost_analysis (which counts a while body ONCE)
+# sees every layer.  Set via ``set_layer_scan_unroll`` or Model.scan_unroll.
+_LAYER_SCAN_UNROLL: int | bool = 1
+
+
+def set_layer_scan_unroll(unroll: int | bool) -> None:
+    global _LAYER_SCAN_UNROLL
+    _LAYER_SCAN_UNROLL = unroll
+
+
+def _layer_scan(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=_LAYER_SCAN_UNROLL)
+
+
+# ======================================================================
+# Shared helpers
+# ======================================================================
+
+
+def _sinusoidal_positions(seq_len: int, d: int, offset=0) -> jnp.ndarray:
+    pos = jnp.arange(seq_len)[:, None] + offset
+    div = jnp.exp(jnp.arange(0, d, 2) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((seq_len, d))
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def _embed_tokens(cfg: ModelConfig, params: Params, batch: dict) -> jnp.ndarray:
+    dt = common.dtype_of(cfg.dtype)
+    x = params["embed"]["embedding"][batch["tokens"]].astype(dt)
+    if cfg.frontend == "vision_patches" and "patch_embeds" in batch:
+        x = jax.lax.dynamic_update_slice(
+            x, batch["patch_embeds"].astype(dt), (0, 0, 0)
+        )
+    return x
+
+
+def _default_positions(cfg: ModelConfig, b: int, s: int, batch: dict) -> jnp.ndarray:
+    if cfg.rope_variant == "mrope":
+        if "positions" in batch:
+            return batch["positions"]
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :, None], (b, s, 3))
+        return pos
+    return jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+
+def _lm_logits(cfg: ModelConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return linear(params["lm_head"], rmsnorm(params["final_norm"], x, eps=cfg.norm_eps))
+
+
+def _stack_init(rng, n: int, init_fn: Callable[[Any], Params]) -> Params:
+    """Initialise n layers and stack leaves along a leading axis."""
+    keys = jax.random.split(rng, n)
+    layers = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+# ======================================================================
+# Dense / MoE / VLM decoder-only family
+# ======================================================================
+
+
+def _init_decoder_block(rng, cfg: ModelConfig, *, moe_layer: bool) -> Params:
+    dt = common.dtype_of(cfg.dtype)
+    k1, k2 = jax.random.split(rng)
+    p: Params = {"ln1": common.rmsnorm_init(cfg.d_model), "ln2": common.rmsnorm_init(cfg.d_model)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = attn_lib.init_mla(k1, cfg)
+    else:
+        p["attn"] = attn_lib.init_attention(k1, cfg)
+    if moe_layer:
+        p["moe"] = ffn.init_moe(k2, cfg)
+    else:
+        d_ff = cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.first_dense_layers) else cfg.d_ff
+        p["ffn"] = ffn.init_swiglu(k2, cfg.d_model, d_ff, dtype=dt)
+    return p
+
+
+def _decoder_block(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,
+    *,
+    positions: jnp.ndarray,
+    cache: dict | None,
+    use_chunked: bool,
+) -> tuple[jnp.ndarray, dict | None, jnp.ndarray]:
+    """Returns (x, new_cache_slice, aux_loss)."""
+    h = rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        mcache = (
+            attn_lib.MLACache(cache["c_kv"], cache["k_rope"], cache["length"])
+            if cache is not None
+            else None
+        )
+        a, new_mcache = attn_lib.mla_forward(
+            cfg, p["attn"], h, positions=positions, cache=mcache, use_chunked=use_chunked
+        )
+        new_cache = (
+            {"c_kv": new_mcache.c_kv, "k_rope": new_mcache.k_rope}
+            if new_mcache is not None
+            else None
+        )
+    else:
+        kcache = (
+            attn_lib.KVCache(cache["k"], cache["v"], cache["length"])
+            if cache is not None
+            else None
+        )
+        a, new_kcache = attn_lib.attention_forward(
+            cfg, p["attn"], h, positions=positions, cache=kcache, use_chunked=use_chunked
+        )
+        new_cache = (
+            {"k": new_kcache.k, "v": new_kcache.v} if new_kcache is not None else None
+        )
+    x = x + a
+    h = rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+    if "moe" in p:
+        f, aux = ffn.moe_forward(cfg, p["moe"], h)
+    else:
+        f, aux = ffn.swiglu_forward(p["ffn"], h), jnp.zeros((), jnp.float32)
+    return x + f, new_cache, aux
+
+
+def _init_decoder_lm(rng, cfg: ModelConfig) -> Params:
+    dt = common.dtype_of(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    n_dense0 = cfg.moe.first_dense_layers if cfg.moe else 0
+    params: Params = {
+        "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype=dt),
+        "blocks": _stack_init(
+            ks[1],
+            cfg.n_layers - n_dense0,
+            lambda k: _init_decoder_block(k, cfg, moe_layer=cfg.moe is not None),
+        ),
+        "final_norm": common.rmsnorm_init(cfg.d_model),
+        "lm_head": common.dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype=dt),
+    }
+    if n_dense0:
+        params["dense0"] = _stack_init(
+            ks[3], n_dense0, lambda k: _init_decoder_block(k, cfg, moe_layer=False)
+        )
+    return params
+
+
+def _run_decoder_stack(
+    cfg: ModelConfig,
+    params: Params,
+    x: jnp.ndarray,
+    *,
+    positions: jnp.ndarray,
+    cache: dict | None,
+    use_chunked: bool,
+    remat: bool,
+) -> tuple[jnp.ndarray, dict | None, jnp.ndarray]:
+    """Scan x through (dense0 blocks +) the main stacked blocks."""
+
+    def make_body(which: str):
+        def body(carry, layer_in):
+            x, aux = carry
+            p, c = layer_in
+            x, new_c, a = _decoder_block(
+                cfg, p, x, positions=positions, cache=c, use_chunked=use_chunked
+            )
+            return (x, aux + a), new_c
+
+        return jax.checkpoint(body, policy=REMAT_POLICY) if remat else body
+
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    length = cache["length"] if cache is not None else None
+
+    def slice_cache(prefix: str):
+        if cache is None:
+            return None
+        sub = {k[len(prefix):]: v for k, v in cache.items() if k.startswith(prefix)}
+        return sub or None
+
+    if "dense0" in params:
+        c0 = slice_cache("dense0/")
+        c0 = None if c0 is None else {**c0, "length": length}
+        xs = (params["dense0"], {k: v for k, v in (c0 or {}).items() if k != "length"} or None)
+
+        def body0(carry, layer_in):
+            x, aux = carry
+            p, c = layer_in
+            if c is not None:
+                c = {**c, "length": length}
+            x, new_c, a = _decoder_block(
+                cfg, p, x, positions=positions, cache=c, use_chunked=use_chunked
+            )
+            if new_c is not None:
+                new_c.pop("length", None)
+            return (x, aux + a), new_c
+
+        body0 = jax.checkpoint(body0, policy=REMAT_POLICY) if remat else body0
+        (x, aux), nc0 = _layer_scan(body0, (x, aux), xs)
+        if nc0 is not None and cache is not None:
+            new_cache.update({f"dense0/{k}": v for k, v in nc0.items()})
+
+    main_c = slice_cache("main/")
+
+    def body_main(carry, layer_in):
+        x, aux = carry
+        p, c = layer_in
+        if c is not None:
+            c = {**c, "length": length}
+        x, new_c, a = _decoder_block(
+            cfg, p, x, positions=positions, cache=c, use_chunked=use_chunked
+        )
+        if new_c is not None:
+            new_c.pop("length", None)
+        return (x, aux + a), new_c
+
+    body_main = jax.checkpoint(body_main, policy=REMAT_POLICY) if remat else body_main
+    (x, aux), nc = _layer_scan(body_main, (x, aux), (params["blocks"], main_c))
+    if nc is not None and cache is not None:
+        new_cache.update({f"main/{k}": v for k, v in nc.items()})
+        new_cache["length"] = length + (1 if positions.shape[1] == 1 else positions.shape[1])
+    return x, (new_cache if cache is not None else None), aux
+
+
+# ======================================================================
+# Encoder-decoder family (seamless backbone)
+# ======================================================================
+
+
+def _init_encoder_block(rng, cfg: ModelConfig) -> Params:
+    dt = common.dtype_of(cfg.dtype)
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": common.rmsnorm_init(cfg.d_model),
+        "attn": attn_lib.init_attention(k1, cfg),
+        "ln2": common.rmsnorm_init(cfg.d_model),
+        "ffn": ffn.init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype=dt),
+    }
+
+
+def _init_cross_block(rng, cfg: ModelConfig) -> Params:
+    dt = common.dtype_of(cfg.dtype)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln1": common.rmsnorm_init(cfg.d_model),
+        "self_attn": attn_lib.init_attention(k1, cfg),
+        "ln_x": common.rmsnorm_init(cfg.d_model),
+        "cross_attn": attn_lib.init_attention(k2, cfg),
+        "ln2": common.rmsnorm_init(cfg.d_model),
+        "ffn": ffn.init_swiglu(k3, cfg.d_model, cfg.d_ff, dtype=dt),
+    }
+
+
+def _init_encdec(rng, cfg: ModelConfig) -> Params:
+    dt = common.dtype_of(cfg.dtype)
+    ks = jax.random.split(rng, 5)
+    return {
+        "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype=dt),
+        "enc_blocks": _stack_init(ks[1], cfg.encoder_layers, lambda k: _init_encoder_block(k, cfg)),
+        "enc_norm": common.rmsnorm_init(cfg.d_model),
+        "dec_blocks": _stack_init(ks[2], cfg.n_layers, lambda k: _init_cross_block(k, cfg)),
+        "final_norm": common.rmsnorm_init(cfg.d_model),
+        "lm_head": common.dense_init(ks[3], cfg.d_model, cfg.vocab_size, dtype=dt),
+    }
+
+
+def _run_encoder(cfg: ModelConfig, params: Params, src: jnp.ndarray, *, remat: bool):
+    b, s, d = src.shape
+    x = src + _sinusoidal_positions(s, d).astype(src.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, p):
+        h = rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+        a, _ = attn_lib.attention_forward(cfg, p["attn"], h, positions=pos, mask_kind="full")
+        x = x + a
+        h = rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+        return x + ffn.swiglu_forward(p["ffn"], h), None
+
+    body = jax.checkpoint(body, policy=REMAT_POLICY) if remat else body
+    x, _ = _layer_scan(body, x, params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, eps=cfg.norm_eps)
+
+
+def _run_decoder_encdec(
+    cfg: ModelConfig,
+    params: Params,
+    x: jnp.ndarray,
+    memory: jnp.ndarray | None,
+    cache: dict | None,
+    *,
+    remat: bool,
+):
+    b, s, d = x.shape
+    length = cache["length"] if cache is not None else jnp.zeros((), jnp.int32)
+    x = x + _sinusoidal_positions(s, d, offset=length).astype(x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, layer_in):
+        p, c = layer_in
+        h = rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+        if c is not None:
+            self_c = attn_lib.KVCache(c["self_k"], c["self_v"], length)
+        else:
+            self_c = None
+        a, new_self = attn_lib.attention_forward(
+            cfg, p["self_attn"], h, positions=pos, cache=self_c
+        )
+        x = x + a
+        h = rmsnorm(p["ln_x"], x, eps=cfg.norm_eps)
+        if c is not None:
+            cross_c = attn_lib.KVCache(c["cross_k"], c["cross_v"], jnp.zeros((), jnp.int32))
+            a, _ = attn_lib.attention_forward(
+                cfg, p["cross_attn"], h, positions=pos, cache=cross_c, kv_source=h
+            )
+        else:
+            assert memory is not None
+            a, _ = attn_lib.attention_forward(
+                cfg, p["cross_attn"], h, positions=pos, kv_source=memory, mask_kind="full"
+            )
+        x = x + a
+        h = rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+        x = x + ffn.swiglu_forward(p["ffn"], h)
+        out_c = None
+        if c is not None:
+            out_c = {"self_k": new_self.k, "self_v": new_self.v,
+                     "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+        return x, out_c
+
+    body = jax.checkpoint(body, policy=REMAT_POLICY) if remat else body
+    cache_xs = None
+    if cache is not None:
+        cache_xs = {k: v for k, v in cache.items() if k != "length"}
+    x, new_c = _layer_scan(body, x, (params["dec_blocks"], cache_xs))
+    if cache is not None:
+        new_c["length"] = length + s
+    return x, (new_c if cache is not None else None)
+
+
+# ======================================================================
+# Hybrid (zamba2) — mamba backbone + weight-shared attention block
+# ======================================================================
+
+
+def _init_zamba(rng, cfg: ModelConfig) -> Params:
+    dt = common.dtype_of(cfg.dtype)
+    ks = jax.random.split(rng, 6)
+    every = cfg.shared_attn_every
+    groups = cfg.n_layers // every
+    return {
+        "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype=dt),
+        "mamba": _stack_init(
+            ks[1], groups, lambda k: _stack_init(k, every, lambda k2: ssm.init_mamba2(k2, cfg))
+        ),
+        # one set of shared attention-block weights + per-invocation LN
+        "shared_attn": attn_lib.init_attention(ks[2], cfg),
+        "shared_ffn": ffn.init_swiglu(ks[3], cfg.d_model, cfg.d_ff, dtype=dt),
+        "shared_ln": {"scale": jnp.ones((groups, cfg.d_model), jnp.float32)},
+        "shared_ln2": {"scale": jnp.ones((groups, cfg.d_model), jnp.float32)},
+        "final_norm": common.rmsnorm_init(cfg.d_model),
+        "lm_head": common.dense_init(ks[4], cfg.d_model, cfg.vocab_size, dtype=dt),
+    }
+
+
+ZAMBA_WINDOW = 4096  # shared-attn sliding window: keeps long_500k sub-quadratic
+
+
+def _run_zamba(
+    cfg: ModelConfig,
+    params: Params,
+    x: jnp.ndarray,
+    cache: dict | None,
+    *,
+    decode: bool,
+    remat: bool,
+):
+    b, s, _ = x.shape
+    length = cache["length"] if cache is not None else jnp.zeros((), jnp.int32)
+    window = min(ZAMBA_WINDOW, 1 << 62)
+
+    def group_body(carry, layer_in):
+        x = carry
+        p_group, ln_scale, ln2_scale, c = layer_in
+
+        # --- `every` mamba layers (inner scan over stacked params) ------
+        def mamba_body(x, inner):
+            p_m, st = inner
+            if decode:
+                y, new_st = ssm.mamba2_step(cfg, p_m, x, ssm.MambaState(**st))
+            else:
+                y, new_st = ssm.mamba2_forward(
+                    cfg, p_m, x, ssm.MambaState(**st) if st is not None else None
+                )
+            return x + y, new_st._asdict() if new_st is not None else None
+
+        inner_states = c["mamba"] if c is not None else None
+        if inner_states is None:
+            d_inner = cfg.ssm_expand * cfg.d_model
+            n_heads = d_inner // cfg.mamba_headdim
+            every = cfg.n_layers // params["shared_ln"]["scale"].shape[0]
+            inner_states = {
+                "h": jnp.zeros((every, b, n_heads, cfg.mamba_headdim, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((every, b, cfg.ssm_conv - 1,
+                                   d_inner + 2 * cfg.ssm_state), common.dtype_of(cfg.dtype)),
+            }
+        x, new_mamba = _layer_scan(mamba_body, x, (p_group, inner_states))
+
+        # --- shared attention + FFN block -------------------------------
+        h = rmsnorm({"scale": ln_scale}, x, eps=cfg.norm_eps)
+        if c is not None:
+            kv = attn_lib.KVCache(c["attn_k"], c["attn_v"], length)
+            a, new_kv = attn_lib.attention_forward(
+                cfg, params["shared_attn"], h,
+                positions=(length + jnp.arange(s))[None, :].repeat(b, 0),
+                cache=kv, window=window, ring=True, use_chunked=s > 4096,
+            )
+            new_attn = {"attn_k": new_kv.k, "attn_v": new_kv.v}
+        else:
+            a, _ = attn_lib.attention_forward(
+                cfg, params["shared_attn"], h,
+                positions=jnp.broadcast_to(jnp.arange(s)[None, :], (b, s)),
+                window=window, use_chunked=s > 4096,
+            )
+            new_attn = None
+        x = x + a
+        h = rmsnorm({"scale": ln2_scale}, x, eps=cfg.norm_eps)
+        x = x + ffn.swiglu_forward(params["shared_ffn"], h)
+
+        new_c = None
+        if c is not None:
+            new_c = {"mamba": new_mamba, **(new_attn or {})}
+        return x, new_c
+
+    group_body = jax.checkpoint(group_body, policy=REMAT_POLICY) if remat else group_body
+    cache_xs = None
+    if cache is not None:
+        cache_xs = {k: v for k, v in cache.items() if k != "length"}
+        cache_xs = {"mamba": cache_xs["mamba"], "attn_k": cache_xs["attn_k"],
+                    "attn_v": cache_xs["attn_v"]}
+    x, new_cache = _layer_scan(
+        group_body,
+        x,
+        (params["mamba"], params["shared_ln"]["scale"], params["shared_ln2"]["scale"], cache_xs),
+    )
+    if cache is not None:
+        new_cache["length"] = length + s
+    return x, (new_cache if cache is not None else None)
+
+
+# ======================================================================
+# SSM (xlstm) — groups of (slstm_every − 1) mLSTM + 1 sLSTM
+# ======================================================================
+
+
+def _init_xlstm(rng, cfg: ModelConfig) -> Params:
+    dt = common.dtype_of(cfg.dtype)
+    every = cfg.slstm_every
+    groups = cfg.n_layers // every
+    ks = jax.random.split(rng, 5)
+    return {
+        "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype=dt),
+        "mlstm": _stack_init(
+            ks[1], groups, lambda k: _stack_init(k, every - 1, lambda k2: ssm.init_mlstm(k2, cfg))
+        ),
+        "slstm": _stack_init(ks[2], groups, lambda k: ssm.init_slstm(k, cfg)),
+        "ln_m": {"scale": jnp.ones((groups, every - 1, cfg.d_model), jnp.float32)},
+        "ln_s": {"scale": jnp.ones((groups, cfg.d_model), jnp.float32)},
+        "final_norm": common.rmsnorm_init(cfg.d_model),
+        "lm_head": common.dense_init(ks[3], cfg.d_model, cfg.vocab_size, dtype=dt),
+    }
+
+
+def _run_xlstm(
+    cfg: ModelConfig,
+    params: Params,
+    x: jnp.ndarray,
+    cache: dict | None,
+    *,
+    decode: bool,
+    remat: bool,
+):
+    b, s, _ = x.shape
+    every = cfg.slstm_every
+    groups = cfg.n_layers // every
+
+    def group_body(x, layer_in):
+        p_m, p_s, ln_m, ln_s, c = layer_in
+
+        def mlstm_body(x, inner):
+            p, ln, st = inner
+            h = rmsnorm({"scale": ln}, x, eps=cfg.norm_eps)
+            state = ssm.XLSTMState(**st) if st is not None else None
+            if decode:
+                y, new_st = ssm.mlstm_step(cfg, p, h, state)
+            else:
+                y, new_st = ssm.mlstm_forward(cfg, p, h, state)
+            return x + y, new_st._asdict()
+
+        m_states = c["mlstm"] if c is not None else None
+        if m_states is None:
+            st0 = ssm.mlstm_init_state(cfg, b)
+            m_states = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (every - 1, *a.shape)), st0._asdict()
+            )
+        x, new_m = _layer_scan(mlstm_body, x, (p_m, ln_m, m_states))
+
+        h = rmsnorm({"scale": ln_s}, x, eps=cfg.norm_eps)
+        s_state = ssm.XLSTMState(**c["slstm"]) if c is not None else None
+        if decode:
+            y, new_s = ssm.slstm_step(cfg, p_s, h, s_state)
+        else:
+            y, new_s = ssm.slstm_forward(cfg, p_s, h, s_state)
+        x = x + y
+        new_c = None
+        if c is not None:
+            new_c = {"mlstm": new_m, "slstm": new_s._asdict()}
+        return x, new_c
+
+    group_body = jax.checkpoint(group_body, policy=REMAT_POLICY) if remat else group_body
+    cache_xs = None
+    if cache is not None:
+        cache_xs = {"mlstm": cache["mlstm"], "slstm": cache["slstm"]}
+    x, new_cache = _layer_scan(
+        group_body,
+        x,
+        (params["mlstm"], params["slstm"], params["ln_m"]["scale"],
+         params["ln_s"]["scale"], cache_xs),
+    )
+    if cache is not None:
+        new_cache["length"] = cache["length"] + s
+    return x, (new_cache if cache is not None else None)
+
+
+# ======================================================================
+# Model facade
+# ======================================================================
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    # perf knobs (threaded by launch/specs for §Perf hillclimbing)
+    remat: bool = True                # activation checkpointing in train_loss
+    vocab_chunk: int = 0              # >0: chunked CE, never materialises (B,S,V)
+
+    # ------------------------------------------------------------------
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return _init_decoder_lm(rng, cfg)
+        if cfg.family == "encdec":
+            return _init_encdec(rng, cfg)
+        if cfg.family == "hybrid":
+            return _init_zamba(rng, cfg)
+        if cfg.family == "ssm":
+            return _init_xlstm(rng, cfg)
+        raise ValueError(cfg.family)
+
+    # ------------------------------------------------------------------
+    def train_loss(self, params: Params, batch: dict) -> tuple[jnp.ndarray, dict]:
+        cfg = self.cfg
+        remat = self.remat
+        if cfg.family in ("dense", "moe", "vlm"):
+            x = _embed_tokens(cfg, params, batch)
+            b, s = batch["tokens"].shape
+            pos = _default_positions(cfg, b, s, batch)
+            x, _, aux = _run_decoder_stack(
+                cfg, params, x, positions=pos, cache=None,
+                use_chunked=s > 4096, remat=remat,
+            )
+        elif cfg.family == "encdec":
+            memory = _run_encoder(cfg, params, batch["frame_embeds"], remat=remat)
+            x = params["embed"]["embedding"][batch["tokens"]].astype(memory.dtype)
+            x, _ = _run_decoder_encdec(cfg, params, x, memory, None, remat=remat)
+            aux = jnp.zeros((), jnp.float32)
+        elif cfg.family == "hybrid":
+            x = _embed_tokens(cfg, params, batch)
+            x, _ = _run_zamba(cfg, params, x, None, decode=False, remat=remat)
+            aux = jnp.zeros((), jnp.float32)
+        elif cfg.family == "ssm":
+            x = _embed_tokens(cfg, params, batch)
+            x, _ = _run_xlstm(cfg, params, x, None, decode=False, remat=remat)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            raise ValueError(cfg.family)
+        if self.vocab_chunk:
+            h = rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+            nll = common.softmax_cross_entropy_chunked(
+                h, params["lm_head"], batch["labels"], chunk=self.vocab_chunk
+            )
+        else:
+            logits = _lm_logits(cfg, params, x)
+            nll = common.softmax_cross_entropy(logits, batch["labels"])
+        return nll + aux, {"nll": nll, "aux": aux}
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = common.dtype_of(cfg.dtype)
+        hd = cfg.resolved_head_dim
+        length = jnp.zeros((), jnp.int32)
+        if cfg.family in ("dense", "moe", "vlm"):
+            n_dense0 = cfg.moe.first_dense_layers if cfg.moe else 0
+            n_main = cfg.n_layers - n_dense0
+            cache: dict = {"length": length}
+
+            def kv(n_layers):
+                if cfg.attn_kind == "mla":
+                    m = cfg.mla
+                    return {
+                        "c_kv": jnp.zeros((n_layers, batch_size, max_len, m.kv_lora_rank), dt),
+                        "k_rope": jnp.zeros((n_layers, batch_size, max_len, m.qk_rope_head_dim), dt),
+                    }
+                return {
+                    "k": jnp.zeros((n_layers, batch_size, max_len, cfg.n_kv_heads, hd), dt),
+                    "v": jnp.zeros((n_layers, batch_size, max_len, cfg.n_kv_heads, hd), dt),
+                }
+
+            cache.update({f"main/{k}": v for k, v in kv(n_main).items()})
+            if n_dense0:
+                cache.update({f"dense0/{k}": v for k, v in kv(n_dense0).items()})
+            return cache
+        if cfg.family == "encdec":
+            L = cfg.n_layers
+            return {
+                "self_k": jnp.zeros((L, batch_size, max_len, cfg.n_kv_heads, hd), dt),
+                "self_v": jnp.zeros((L, batch_size, max_len, cfg.n_kv_heads, hd), dt),
+                "cross_k": jnp.zeros((L, batch_size, 1, cfg.n_kv_heads, hd), dt),  # resized at prefill
+                "cross_v": jnp.zeros((L, batch_size, 1, cfg.n_kv_heads, hd), dt),
+                "length": length,
+            }
+        if cfg.family == "hybrid":
+            every = cfg.shared_attn_every
+            groups = cfg.n_layers // every
+            d_inner = cfg.ssm_expand * cfg.d_model
+            n_heads_m = d_inner // cfg.mamba_headdim
+            w = min(ZAMBA_WINDOW, max_len)
+            return {
+                "mamba": {
+                    "h": jnp.zeros((groups, every, batch_size, n_heads_m,
+                                    cfg.mamba_headdim, cfg.ssm_state), jnp.float32),
+                    "conv": jnp.zeros((groups, every, batch_size, cfg.ssm_conv - 1,
+                                       d_inner + 2 * cfg.ssm_state), dt),
+                },
+                "attn_k": jnp.zeros((groups, batch_size, w, cfg.n_kv_heads, hd), dt),
+                "attn_v": jnp.zeros((groups, batch_size, w, cfg.n_kv_heads, hd), dt),
+                "length": length,
+            }
+        if cfg.family == "ssm":
+            every = cfg.slstm_every
+            groups = cfg.n_layers // every
+            m0 = ssm.mlstm_init_state(cfg, batch_size)._asdict()
+            s0 = ssm.slstm_init_state(cfg, batch_size)._asdict()
+            return {
+                "mlstm": jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (groups, every - 1, *a.shape)).copy(), m0
+                ),
+                "slstm": jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (groups, *a.shape)).copy(), s0
+                ),
+                "length": length,
+            }
+        raise ValueError(cfg.family)
+
+    # ------------------------------------------------------------------
+    def prefill(self, params: Params, batch: dict, cache: dict) -> tuple[jnp.ndarray, dict]:
+        """Run the prompt through the model, filling the decode cache.
+
+        Returns last-position logits (B, V) and the updated cache.
+        """
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            x = _embed_tokens(cfg, params, batch)
+            b, s = batch["tokens"].shape
+            pos = _default_positions(cfg, b, s, batch)
+            x, cache, _ = _run_decoder_stack(
+                cfg, params, x, positions=pos, cache=cache,
+                use_chunked=s > 4096, remat=False,
+            )
+        elif cfg.family == "encdec":
+            memory = _run_encoder(cfg, params, batch["frame_embeds"], remat=False)
+            # project cross-attention K/V once; they are fixed for decoding
+            def proj(p):
+                b, sk, _ = memory.shape
+                k = linear(p["cross_attn"]["wk"], memory).reshape(b, sk, cfg.n_kv_heads, -1)
+                v = linear(p["cross_attn"]["wv"], memory).reshape(b, sk, cfg.n_kv_heads, -1)
+                return k, v
+
+            ks, vs = jax.vmap(proj, in_axes=(0,))(params["dec_blocks"])
+            cache = {**cache, "cross_k": ks, "cross_v": vs}
+            x = params["embed"]["embedding"][batch["tokens"]].astype(memory.dtype)
+            x, cache = _run_decoder_encdec(cfg, params, x, None, cache, remat=False)
+        elif cfg.family == "hybrid":
+            x = _embed_tokens(cfg, params, batch)
+            x, cache = _run_zamba(cfg, params, x, cache, decode=False, remat=False)
+        elif cfg.family == "ssm":
+            x = _embed_tokens(cfg, params, batch)
+            x, cache = _run_xlstm(cfg, params, x, cache, decode=False, remat=False)
+        else:
+            raise ValueError(cfg.family)
+        logits = _lm_logits(cfg, params, x[:, -1:])[:, 0]
+        return logits, cache
+
+    # ------------------------------------------------------------------
+    def decode_step(self, params: Params, tokens: jnp.ndarray, cache: dict,
+                    extras: dict | None = None) -> tuple[jnp.ndarray, dict]:
+        """One decode step.  tokens: (B, 1) int32.  Returns (logits, cache)."""
+        cfg = self.cfg
+        batch = {"tokens": tokens, **(extras or {})}
+        x = params["embed"]["embedding"][tokens].astype(common.dtype_of(cfg.dtype))
+        b = tokens.shape[0]
+        if cfg.family in ("dense", "moe", "vlm"):
+            if cfg.rope_variant == "mrope":
+                pos = batch.get(
+                    "positions",
+                    jnp.broadcast_to(cache["length"][None, None, None], (b, 1, 3)).astype(jnp.int32),
+                )
+            else:
+                pos = jnp.broadcast_to(cache["length"][None, None], (b, 1)).astype(jnp.int32)
+            x, cache, _ = _run_decoder_stack(
+                cfg, params, x, positions=pos, cache=cache, use_chunked=False, remat=False
+            )
+        elif cfg.family == "encdec":
+            x, cache = _run_decoder_encdec(cfg, params, x, None, cache, remat=False)
+        elif cfg.family == "hybrid":
+            x, cache = _run_zamba(cfg, params, x, cache, decode=True, remat=False)
+        elif cfg.family == "ssm":
+            x, cache = _run_xlstm(cfg, params, x, cache, decode=True, remat=False)
+        else:
+            raise ValueError(cfg.family)
+        logits = _lm_logits(cfg, params, x)[:, 0]
+        return logits, cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,23 @@
+"""Profilers (paper §6): program, network and energy information collection."""
+
+from repro.profilers.network import NetworkProfiler, SimulatedChannel
+from repro.profilers.energy import EnergyProfiler, EnergyReport
+from repro.profilers.program import (
+    app_profile_from_config,
+    boundary_act_bytes,
+    layer_flops,
+    layer_param_bytes,
+    stage_specs,
+)
+
+__all__ = [
+    "NetworkProfiler",
+    "SimulatedChannel",
+    "EnergyProfiler",
+    "EnergyReport",
+    "app_profile_from_config",
+    "boundary_act_bytes",
+    "layer_flops",
+    "layer_param_bytes",
+    "stage_specs",
+]

@@ -1,0 +1,53 @@
+"""Distributed runtime: sharding rules, pipeline, compression, elasticity."""
+
+from repro.runtime.sharding import (
+    batch_axes,
+    state_shardings,
+    input_shardings,
+    logical_batch_spec,
+    param_shardings,
+    param_spec,
+    shard_params,
+)
+from repro.runtime.compression import (
+    CompressionState,
+    init_compression_state,
+    int8_compress,
+    int8_decompress,
+    topk_compress_with_ef,
+    wire_bytes,
+)
+from repro.runtime.elastic import (
+    DeviceState,
+    ElasticEvent,
+    ElasticMeshManager,
+    HeartbeatMonitor,
+)
+from repro.runtime.pipeline import (
+    pipeline_apply,
+    pipeline_spec_for,
+    stack_stage_params,
+)
+
+__all__ = [
+    "batch_axes",
+    "state_shardings",
+    "input_shardings",
+    "logical_batch_spec",
+    "param_shardings",
+    "param_spec",
+    "shard_params",
+    "CompressionState",
+    "init_compression_state",
+    "int8_compress",
+    "int8_decompress",
+    "topk_compress_with_ef",
+    "wire_bytes",
+    "DeviceState",
+    "ElasticEvent",
+    "ElasticMeshManager",
+    "HeartbeatMonitor",
+    "pipeline_apply",
+    "pipeline_spec_for",
+    "stack_stage_params",
+]

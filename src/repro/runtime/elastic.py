@@ -1,0 +1,176 @@
+"""Elastic scaling & straggler mitigation — the paper's adaptive loop at
+cluster scale.
+
+The paper re-partitions when the *environment* drifts (bandwidth, cloud
+speed).  On a TPU fleet the same events are: chips/pods lost or added
+(changes tier compute capacity ⇒ the speedup factor F), and stragglers
+(changes the *effective* tier speed).  Both are routed through the same
+MCOP re-partitioning path via :class:`ElasticMeshManager`.
+
+Nothing here touches real hardware: failures are *injected* (tests drive
+``mark_failed``/``heartbeat`` with a fake clock), and the manager's output
+is the thing a real deployment would act on — a new mesh shape, new tier
+specs, and a fresh MCOP placement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.placement import PlacementPlan, StageSpec, TierSpec, plan_placement
+
+__all__ = ["DeviceState", "HeartbeatMonitor", "ElasticMeshManager", "ElasticEvent"]
+
+
+@dataclasses.dataclass
+class DeviceState:
+    device_id: int
+    last_heartbeat: float
+    step_time_ewma: float = 0.0  # seconds per step, EWMA
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    """Deadline-based failure & straggler detection with an injectable clock.
+
+    * a device missing ``deadline`` seconds of heartbeats is *failed*;
+    * a device whose EWMA step time exceeds ``straggler_factor`` × the
+      fleet median is a *straggler* — its microbatches are reassigned
+      (returned by :meth:`reassignment`) rather than the whole step
+      waiting on it.
+    """
+
+    def __init__(
+        self,
+        device_ids: Sequence[int],
+        *,
+        deadline: float = 30.0,
+        straggler_factor: float = 2.0,
+        ewma: float = 0.3,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.clock = clock
+        self.deadline = deadline
+        self.straggler_factor = straggler_factor
+        self.ewma = ewma
+        now = clock()
+        self.devices = {d: DeviceState(d, last_heartbeat=now) for d in device_ids}
+
+    # ------------------------------------------------------------------
+    def heartbeat(self, device_id: int, step_time: float | None = None) -> None:
+        st = self.devices[device_id]
+        st.last_heartbeat = self.clock()
+        st.alive = True
+        if step_time is not None:
+            st.step_time_ewma = (
+                step_time
+                if st.step_time_ewma == 0.0
+                else (1 - self.ewma) * st.step_time_ewma + self.ewma * step_time
+            )
+
+    def mark_failed(self, device_id: int) -> None:
+        self.devices[device_id].alive = False
+
+    # ------------------------------------------------------------------
+    def failed(self) -> list[int]:
+        now = self.clock()
+        out = []
+        for d, st in self.devices.items():
+            if not st.alive or (now - st.last_heartbeat) > self.deadline:
+                st.alive = False
+                out.append(d)
+        return sorted(out)
+
+    def stragglers(self) -> list[int]:
+        alive = [st for st in self.devices.values() if st.alive and st.step_time_ewma > 0]
+        if len(alive) < 2:
+            return []
+        median = float(np.median([st.step_time_ewma for st in alive]))
+        return sorted(
+            st.device_id
+            for st in alive
+            if st.step_time_ewma > self.straggler_factor * median
+        )
+
+    def reassignment(self, n_micro: int) -> dict[int, int]:
+        """Microbatches per alive device, shifting load off stragglers.
+
+        Straggler devices get half weight; failed devices get zero.  The
+        returned dict maps device_id → microbatch count, summing to
+        ``n_micro`` (deterministic largest-remainder rounding).
+        """
+        self.failed()  # refresh liveness
+        slow = set(self.stragglers())
+        weights = {
+            d: (0.0 if not st.alive else (0.5 if d in slow else 1.0))
+            for d, st in self.devices.items()
+        }
+        total = sum(weights.values())
+        if total == 0:
+            raise RuntimeError("no alive devices to assign microbatches to")
+        raw = {d: n_micro * w / total for d, w in weights.items()}
+        base = {d: int(np.floor(r)) for d, r in raw.items()}
+        rem = n_micro - sum(base.values())
+        order = sorted(raw, key=lambda d: raw[d] - base[d], reverse=True)
+        for d in order[:rem]:
+            base[d] += 1
+        return base
+
+
+@dataclasses.dataclass
+class ElasticEvent:
+    step: int
+    reason: str                    # "failure" | "scale_up" | "straggler"
+    tier_local: TierSpec
+    tier_remote: TierSpec
+    plan: PlacementPlan
+
+
+class ElasticMeshManager:
+    """Rebuilds tier specs on chip-count changes and re-runs MCOP.
+
+    The paper's F = cloud_speed/device_speed becomes
+    (chips_remote·peak)/(chips_local·peak); losing chips on either side
+    changes F and therefore potentially the optimal cut — exactly the
+    paper's "environment change ⇒ re-partition" loop (Fig. 1).
+    """
+
+    def __init__(
+        self,
+        stages: Sequence[StageSpec],
+        tier_local: TierSpec,
+        tier_remote: TierSpec,
+        *,
+        backend: str = "reference",
+    ):
+        self.stages = list(stages)
+        self.tier_local = tier_local
+        self.tier_remote = tier_remote
+        self.backend = backend
+        self.events: list[ElasticEvent] = []
+        self.plan = plan_placement(
+            self.stages, tier_local, tier_remote, backend=backend
+        )
+
+    @property
+    def speedup(self) -> float:
+        return self.tier_remote.total_flops / self.tier_local.total_flops
+
+    def resize(self, step: int, *, local_chips: int | None = None,
+               remote_chips: int | None = None, reason: str = "failure") -> ElasticEvent:
+        if local_chips is not None:
+            self.tier_local = dataclasses.replace(self.tier_local, chips=local_chips)
+        if remote_chips is not None:
+            self.tier_remote = dataclasses.replace(self.tier_remote, chips=remote_chips)
+        if min(self.tier_local.chips, self.tier_remote.chips) <= 0:
+            raise RuntimeError("a tier lost all its chips; cannot re-place")
+        self.plan = plan_placement(
+            self.stages, self.tier_local, self.tier_remote, backend=self.backend
+        )
+        ev = ElasticEvent(step, reason, self.tier_local, self.tier_remote, self.plan)
+        self.events.append(ev)
+        return ev

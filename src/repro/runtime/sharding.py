@@ -1,0 +1,304 @@
+"""Sharding rules: parameter/activation PartitionSpecs for every family.
+
+The rules are *path-based*: a parameter's position in the pytree plus its
+rank decides its PartitionSpec.  All model weights carry a leading stacked
+layer axis (scan-over-layers), which is never sharded; the interesting
+axes are the trailing two.
+
+Conventions on the production mesh (("pod",) "data", "model"):
+
+* tensor parallelism over "model":
+    - attention wq/wk/wv:   (d, H·hd)    → shard output dim  P(None, "model")
+    - attention wo:         (H·hd, d)    → shard input dim   P("model", None)
+    - FFN wi/wg:            (d, d_ff)    → P(None, "model")
+    - FFN wo:               (d_ff, d)    → P("model", None)
+    - MoE experts (E, d, f): expert-parallel over "model" → P("model", None, None)
+    - embedding (V, d):     vocab-sharded P("model", None)
+    - lm_head (d, V):       vocab-sharded P(None, "model")
+    - norm scales, biases, small vectors: replicated.
+* data parallelism over "data" (and "pod" in the baseline multi-pod
+  config): the batch axis of every input/activation.
+* sequence parallelism: long-context shapes shard the sequence axis of
+  activations over "model" (weights stay TP-sharded; attention for those
+  shapes is window/chunk-local, so no cross-shard score matrix exists).
+
+``logical_batch_spec(mesh)`` returns the batch PartitionSpec for whatever
+axes exist in the mesh, so the same code serves (data, model) and
+(pod, data, model) meshes.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "batch_axes",
+    "state_shardings",
+    "FSDP_MIN_ELEMENTS",
+    "logical_batch_spec",
+    "param_spec",
+    "param_shardings",
+    "input_shardings",
+    "shard_params",
+]
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes the global batch is sharded over ("pod" joins DP when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def logical_batch_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh))
+
+
+# ----------------------------------------------------------------------
+# Parameter rules
+# ----------------------------------------------------------------------
+
+# (path regex, rank of the *unstacked* param) → spec for the trailing dims.
+# Rank counts the non-layer-stacked dimensions.  The spec below is for the
+# trailing `rank` axes; leading stack axes are padded with None.
+# Order matters: first match wins.
+_RULES: list[tuple[str, int, tuple[Any, ...]]] = [
+    # --- embeddings / heads -------------------------------------------
+    (r"embed/embedding$", 2, ("model", None)),
+    (r"lm_head/w$", 2, (None, "model")),
+    # --- MoE (expert-parallel over "model") ------------------------------
+    (r"moe/router/w$", 2, (None, None)),                    # small, replicated
+    (r"moe/shared/(w_gate|w_up)/w$", 2, (None, "model")),
+    (r"moe/shared/w_down/w$", 2, ("model", None)),
+    (r"moe/(w_gate|w_up|w_down)$", 3, ("model", None, None)),  # (E, d, f)/(E, f, d)
+    # --- MLA projections (before generic attn rules) ----------------------
+    (r"attn/w_dq/w$", 2, (None, None)),          # d → q_lora (small rank)
+    (r"attn/w_uq/w$", 2, (None, "model")),       # q_lora → H·qk_head
+    (r"attn/w_dkv/w$", 2, (None, None)),         # d → kv_lora (+rope)
+    (r"attn/w_uk/w$", 2, (None, "model")),       # kv_lora → H·nope
+    (r"attn/w_uv/w$", 2, (None, "model")),       # kv_lora → H·v_head
+    # --- attention ------------------------------------------------------
+    (r"(attn|self_attn|cross_attn|shared_attn)/(wq|wk|wv)/w$", 2, (None, "model")),
+    (r"(attn|self_attn|cross_attn|shared_attn)/(wq|wk|wv)/b$", 1, ("model",)),
+    (r"(attn|self_attn|cross_attn|shared_attn)/wo/w$", 2, ("model", None)),
+    # --- dense FFN --------------------------------------------------------
+    (r"(ffn|shared_ffn)/(w_gate|w_up)/w$", 2, (None, "model")),
+    (r"(ffn|shared_ffn)/w_down/w$", 2, ("model", None)),
+    # --- mamba -----------------------------------------------------------
+    (r"in_proj/w$", 2, (None, "model")),         # d → (2·d_inner + 2N + H)
+    (r"out_proj/w$", 2, ("model", None)),        # d_inner → d
+    (r"conv_w$", 2, (None, "model")),            # (K, conv_channels)
+    (r"conv_b$", 1, ("model",)),
+    # --- xlstm ------------------------------------------------------------
+    (r"(wq|wk|wv|w_up|w_gatez|w_in|w_if)/w$", 2, (None, "model")),
+    (r"w_down/w$", 2, ("model", None)),
+]
+
+_COMPILED = [(re.compile(pat), rank, spec) for pat, rank, spec in _RULES]
+
+
+# Leaves bigger than this get the FSDP ("data") axis on top of TP —
+# ZeRO-3-style 2D weight sharding.  Small tables stay replicated: the
+# all-gather would cost more than the memory saved.
+FSDP_MIN_ELEMENTS = 1 << 20
+
+# MoE expert-weight layout (§Perf hillclimb knob):
+#   "ep_model"          — experts sharded over "model" (+FSDP over "data"):
+#                         memory-equivalent but every use all-gathers the
+#                         FSDP axis of every expert's weights.
+#   "ep_data_tp_model"  — experts sharded over "data" (EP), d_ff over
+#                         "model" (TP inside the expert): same per-device
+#                         memory, NO per-step weight gathers — tokens move
+#                         (all-to-all), weights stay.
+_EXPERT_MODE = "ep_model"
+
+
+def set_expert_sharding(mode: str) -> None:
+    global _EXPERT_MODE
+    assert mode in ("ep_model", "ep_data_tp_model"), mode
+    _EXPERT_MODE = mode
+
+
+def param_spec(
+    path: str, shape: tuple[int, ...], mesh: Mesh, *, fsdp: bool = True
+) -> P:
+    """PartitionSpec for one parameter, given its '/'-joined tree path.
+
+    TP rule first (the table above), then — for large leaves — the first
+    still-unsharded trailing axis that divides the "data" axis is sharded
+    over "data" (FSDP / ZeRO-3).  Optimizer moments inherit these specs
+    leaf-for-leaf, so parameter+optimizer memory scales with 1/(TP·DP).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    have_model = "model" in sizes
+
+    def apply_fsdp(lead_n: int, fixed: list[Any]) -> list[Any]:
+        if not fsdp or "data" not in sizes or sizes["data"] == 1:
+            return fixed
+        import math as _math
+
+        if _math.prod(shape) < FSDP_MIN_ELEMENTS:
+            return fixed
+        tail_shape = shape[lead_n:]
+        for i, (dim, ax) in enumerate(zip(tail_shape, fixed)):
+            if ax is None and dim % sizes["data"] == 0 and dim > 1:
+                fixed[i] = "data"
+                break
+        return fixed
+
+    for pat, rank, trailing in _COMPILED:
+        if pat.search(path):
+            if len(shape) < rank:
+                break
+            lead_n = len(shape) - rank
+            if (
+                _EXPERT_MODE == "ep_data_tp_model"
+                and rank == 3
+                and re.search(r"moe/(w_gate|w_up|w_down)$", path)
+            ):
+                # (E, d, f) / (E, f, d): experts over "data", d_ff over "model"
+                trailing = (
+                    ("data", None, "model")
+                    if path.endswith(("w_gate", "w_up"))
+                    else ("data", "model", None)
+                )
+                spec = tuple(
+                    (a if (a is None or a in sizes) else None) for a in trailing
+                )
+                fixed = []
+                for dim, ax in zip(shape[lead_n:], spec):
+                    if ax is not None and dim % sizes.get(ax, 1) != 0:
+                        ax = None
+                    fixed.append(ax)
+                return P(*((None,) * lead_n), *fixed)  # no extra FSDP
+            spec = tuple(
+                (a if (a is None or have_model) else None) for a in trailing
+            )
+            fixed = []
+            for dim, ax in zip(shape[lead_n:], spec):
+                if ax is not None and dim % sizes.get(ax, 1) != 0:
+                    ax = None  # axis doesn't divide the mesh — replicate
+                fixed.append(ax)
+            fixed = apply_fsdp(lead_n, fixed)
+            return P(*((None,) * lead_n), *fixed)
+    # unmatched: replicate small leaves, FSDP-shard anything big
+    fixed = apply_fsdp(0, [None] * len(shape))
+    return P(*fixed) if any(a is not None for a in fixed) else P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(params_shapes: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """Pytree of NamedShardings matching a pytree of ShapeDtypeStructs."""
+
+    def leaf(path, x):
+        return NamedSharding(
+            mesh, param_spec(_path_str(path), tuple(x.shape), mesh, fsdp=fsdp)
+        )
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shapes)
+
+
+def state_shardings(
+    state_shapes: Any,
+    mesh: Mesh,
+    *,
+    batch_size: int | None = None,
+    prefer: str = "largest",
+) -> Any:
+    """Shardings for decode caches / recurrent states (heuristic, documented).
+
+    Per leaf: the axis equal to ``batch_size`` (searched left-to-right)
+    shards over the DP axes; then one remaining axis divisible by the
+    "model" axis shards over "model":
+
+      * ``prefer="largest"`` — the largest such axis (for KV caches this is
+        the sequence axis — flash-decoding-style sequence sharding);
+      * ``prefer="last"`` — the right-most such axis (head_dim/feature
+        sharding; keeps the cache layout aligned with TP weight sharding).
+
+    Scalars and tiny leaves stay replicated.  ``prefer`` is a §Perf
+    hillclimbing knob — the two layouts trade softmax-stat all-reduces
+    against score-matrix all-reduces in the decode attention.
+    """
+    ba = batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([sizes[a] for a in ba])) if ba else 1
+    tp = sizes.get("model", 1)
+
+    def leaf(x):
+        spec: list[Any] = [None] * x.ndim
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        b_axis = None
+        if batch_size is not None and dp > 1 and batch_size % dp == 0:
+            for i, dim in enumerate(x.shape):
+                if dim == batch_size:
+                    spec[i] = ba
+                    b_axis = i
+                    break
+        if tp > 1:
+            cand = [
+                (dim, i)
+                for i, dim in enumerate(x.shape)
+                if i != b_axis and spec[i] is None and dim % tp == 0 and dim > 1
+            ]
+            if cand:
+                if prefer == "last":
+                    _, i = max((i, i) for _, i in cand)
+                else:
+                    _, i = max(cand)
+                spec[i] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(leaf, state_shapes)
+
+
+def input_shardings(batch_shapes: Any, mesh: Mesh, *, shard_seq: bool = False) -> Any:
+    """Batch inputs: shard the leading batch axis over the DP axes.
+
+    ``shard_seq=True`` additionally shards axis 1 (sequence) over "model" —
+    the sequence-parallel layout used by the long-context cells.
+    """
+    ba = batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([sizes[a] for a in ba])) if ba else 1
+
+    def leaf(path, x):
+        if x.ndim == 0 or x.shape[0] % max(dp, 1) != 0:
+            return NamedSharding(mesh, P())
+        axes: list[Any] = [ba if ba else None]
+        if (
+            shard_seq
+            and x.ndim >= 2
+            and "model" in mesh.axis_names
+            and x.shape[1] % sizes["model"] == 0
+            and x.shape[1] > 1
+        ):
+            axes.append("model")
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_shapes)
+
+
+def shard_params(params: Any, mesh: Mesh) -> Any:
+    """Device-put a real param pytree according to the rules."""
+    shardings = param_shardings(
+        jax.tree_util.tree_map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
+        mesh,
+    )
+    return jax.tree_util.tree_map(jax.device_put, params, shardings)

@@ -1,0 +1,207 @@
+"""Batched serving engine: KV-cache slots + continuous batching scheduler.
+
+The engine owns a fixed pool of ``max_batch`` cache slots (one decode
+cache built by ``Model.init_cache``).  Requests flow through a FIFO
+admission queue; each engine step either
+
+* **prefills** newly-admitted requests (one jitted prefill per admission
+  wave — right-padded to the slot's prompt capacity so there is exactly
+  one prefill specialisation), or
+* **decodes** every active slot one token (a single jitted decode_step
+  over the whole pool — finished slots keep decoding into a scratch
+  position and are masked; this keeps the decode HLO static, the standard
+  serving-engine trade).
+
+The MCOP tie-in (paper → serving): the *prefill pool vs decode pool* is a
+two-tier offloading decision — prefill is compute-bound (cloud-tier-ish),
+decode is bandwidth-bound (device-tier-ish).  ``examples/serve_lm.py``
+feeds both pools' analytic costs to the placement engine to pick where
+each phase runs; the engine itself is placement-agnostic.
+
+Per-slot state is host-side metadata only; all token/cache state stays in
+device arrays indexed by slot — no host↔device chatter inside the loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+
+__all__ = ["Request", "RequestState", "ServingConfig", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    temperature: float = 0.0      # 0 → greedy
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class RequestState:
+    request: Request
+    slot: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def uid(self) -> int:
+        return self.request.uid
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    max_batch: int = 8
+    max_prompt_len: int = 128
+    max_len: int = 256            # prompt + generation capacity per slot
+    pad_id: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params: Any, cfg: ServingConfig,
+                 *, extras: dict | None = None, rng_seed: int = 0):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.extras = extras or {}
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, RequestState] = {}       # slot → state
+        self.finished: dict[int, RequestState] = {}     # uid → state
+        self._rng = jax.random.PRNGKey(rng_seed)
+        self._uid = 0
+
+        # one pooled cache; per-slot lengths (the model cache tracks a
+        # scalar length, so slots advance in lockstep — admission waves
+        # prefill together; slot-level lengths mask logits instead)
+        self.cache = model.init_cache(cfg.max_batch, cfg.max_len)
+        self._tokens = jnp.full((cfg.max_batch, 1), cfg.pad_id, jnp.int32)
+        self._active_mask = np.zeros(cfg.max_batch, bool)
+
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, *, max_new_tokens: int = 32,
+               temperature: float = 0.0, eos_id: int | None = None) -> int:
+        uid = self._uid
+        self._uid += 1
+        if len(prompt) > self.cfg.max_prompt_len:
+            raise ValueError("prompt longer than max_prompt_len")
+        self.queue.append(
+            Request(uid, np.asarray(prompt, np.int32), max_new_tokens,
+                    temperature, eos_id)
+        )
+        return uid
+
+    # ------------------------------------------------------------------
+    def _prefill_impl(self, params, cache, tokens, extras):
+        batch = {"tokens": tokens, **extras}
+        return self.model.prefill(params, batch, cache)
+
+    def _decode_impl(self, params, cache, tokens):
+        return self.model.decode_step(params, tokens, cache)
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> list[RequestState]:
+        """Move queued requests into free slots; returns admitted states."""
+        free = [s for s in range(self.cfg.max_batch) if not self._active_mask[s]]
+        admitted: list[RequestState] = []
+        while free and self.queue:
+            req = self.queue.popleft()
+            slot = free.pop(0)
+            st = RequestState(req, slot)
+            self.active[slot] = st
+            self._active_mask[slot] = True
+            admitted.append(st)
+        return admitted
+
+    def _sample(self, logits: jnp.ndarray, temps: np.ndarray) -> np.ndarray:
+        self._rng, sub = jax.random.split(self._rng)
+        greedy = jnp.argmax(logits, axis=-1)
+        temp = jnp.asarray(np.maximum(temps, 1e-6))[:, None]
+        sampled = jax.random.categorical(sub, logits / temp, axis=-1)
+        out = jnp.where(jnp.asarray(temps) > 0, sampled, greedy)
+        return np.asarray(out, np.int32)
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One engine iteration.  Returns True while work remains.
+
+        Admission model: waves. A wave of requests is admitted only when
+        the pool is empty (the shared scalar cache length advances in
+        lockstep); within a wave, continuous masking retires sequences
+        early.  This is the single-cache-pool trade documented above.
+        """
+        if not self.active and self.queue:
+            # ---- new wave: reset cache, admit, batch-prefill ------------
+            self.cache = self.model.init_cache(self.cfg.max_batch, self.cfg.max_len)
+            admitted = self._admit()
+            plen = max(len(st.request.prompt) for st in admitted)
+            toks = np.full((self.cfg.max_batch, plen), self.cfg.pad_id, np.int32)
+            for st in admitted:
+                # left-pad so every prompt ends at position plen-1
+                p = st.request.prompt
+                toks[st.slot, plen - len(p):] = p
+            extras = dict(self.extras)
+            logits, self.cache = self._prefill(
+                self.params, self.cache, jnp.asarray(toks), extras
+            )
+            temps = np.array(
+                [
+                    self.active[s].request.temperature if self._active_mask[s] else 0.0
+                    for s in range(self.cfg.max_batch)
+                ]
+            )
+            nxt = self._sample(logits, temps)
+            self._push_tokens(nxt)
+            return True
+
+        if self.active:
+            # ---- decode one token for the whole pool --------------------
+            logits, self.cache = self._decode(self.params, self.cache, self._tokens)
+            temps = np.array(
+                [
+                    self.active[s].request.temperature if s in self.active else 0.0
+                    for s in range(self.cfg.max_batch)
+                ]
+            )
+            nxt = self._sample(logits, temps)
+            self._push_tokens(nxt)
+            return True
+
+        return bool(self.queue)
+
+    def _push_tokens(self, nxt: np.ndarray) -> None:
+        new_tok = np.full((self.cfg.max_batch, 1), self.cfg.pad_id, np.int32)
+        for slot in list(self.active):
+            st = self.active[slot]
+            tok = int(nxt[slot])
+            st.generated.append(tok)
+            req = st.request
+            if (req.eos_id is not None and tok == req.eos_id) or len(
+                st.generated
+            ) >= req.max_new_tokens:
+                st.done = True
+                self.finished[st.uid] = st
+                del self.active[slot]
+                self._active_mask[slot] = False
+            else:
+                new_tok[slot, 0] = tok
+        self._tokens = jnp.asarray(new_tok)
+
+    # ------------------------------------------------------------------
+    def run_to_completion(self, max_steps: int = 10_000) -> dict[int, list[int]]:
+        steps = 0
+        while (self.active or self.queue) and steps < max_steps:
+            self.step()
+            steps += 1
+        return {uid: st.generated for uid, st in sorted(self.finished.items())}

@@ -1,0 +1,2 @@
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update, clip_by_global_norm, cosine_schedule, init_opt_state
+from repro.train.trainer import TrainConfig, TrainState, init_train_state, make_train_step, train_loop

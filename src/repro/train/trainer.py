@@ -1,0 +1,143 @@
+"""Training loop: jitted step with microbatch accumulation + compression.
+
+``make_train_step`` builds the canonical pjit-able step:
+
+    (params, opt_state, batch) → (params, opt_state, metrics)
+
+* **Microbatch accumulation**: the global batch is reshaped to
+  (n_micro, micro_bsz, …) and consumed with ``lax.scan``; gradients are
+  accumulated in float32.  Because each microbatch's grads feed one
+  accumulator that is only all-reduced at use (the optimizer), XLA's
+  latency-hiding scheduler is free to overlap microbatch k+1's compute
+  with k's reduce — the structural property the §Perf log verifies in HLO.
+* **Gradient compression** (optional): top-k-with-error-feedback or int8
+  stochastic rounding applied to the accumulated grads before the
+  optimizer (i.e., before the DP all-reduce boundary in the sharded
+  lowering); wire accounting feeds the roofline's collective term.
+* **Donation**: params/opt state are donated so the compiled step updates
+  in place (halves peak HBM on real hardware).
+
+The same function lowers for the 1-CPU smoke tests, the 256-chip pod and
+the 512-chip multi-pod mesh — only the shardings differ.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import compression as comp_lib
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+__all__ = ["TrainConfig", "make_train_step", "train_loop", "TrainState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    n_micro: int = 1
+    compression: str = "none"          # "none" | "topk" | "int8"
+    topk_frac: float = 0.01
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: OptState
+    comp_state: comp_lib.CompressionState | None
+
+
+def init_train_state(params: Any, cfg: TrainConfig) -> TrainState:
+    comp = (
+        comp_lib.init_compression_state(params)
+        if cfg.compression == "topk"
+        else None
+    )
+    return TrainState(params=params, opt_state=init_opt_state(params), comp_state=comp)
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, dict], tuple[jnp.ndarray, dict]],
+    cfg: TrainConfig,
+):
+    """Returns step(params, opt_state, comp_state, batch, rng) → (...)."""
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accumulate(params: Any, batch: dict) -> tuple[jnp.ndarray, Any, dict]:
+        if cfg.n_micro == 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads
+            ), aux
+
+        def split(x):
+            return x.reshape(cfg.n_micro, x.shape[0] // cfg.n_micro, *x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, _aux), grads = grad_fn(params, mb)
+            grads_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32) / cfg.n_micro,
+                grads_acc,
+                grads,
+            )
+            return (loss_acc + loss / cfg.n_micro, grads_acc), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zeros), micro)
+        return loss, grads, {}
+
+    def step(params, opt_state, comp_state, batch, rng):
+        loss, grads, _aux = accumulate(params, batch)
+        if cfg.compression == "topk":
+            grads, comp_state = comp_lib.topk_compress_with_ef(
+                grads, comp_state, frac=cfg.topk_frac
+            )
+        elif cfg.compression == "int8":
+            q8, scales = comp_lib.int8_compress(grads, rng)
+            grads = comp_lib.int8_decompress(q8, scales)
+        params, opt_state, om = adamw_update(cfg.optimizer, params, grads, opt_state)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, comp_state, metrics
+
+    return step
+
+
+def train_loop(
+    model_loss_fn: Callable[[Any, dict], tuple[jnp.ndarray, dict]],
+    params: Any,
+    batches,                    # iterable of batch dicts
+    cfg: TrainConfig,
+    *,
+    jit: bool = True,
+    donate: bool = False,  # donating caller-owned params invalidates them
+    hooks: list[Callable[[int, dict], None]] | None = None,
+) -> tuple[TrainState, list[dict]]:
+    """Drive ``make_train_step`` over an iterable of batches (host loop)."""
+    state = init_train_state(params, cfg)
+    step_fn = make_train_step(model_loss_fn, cfg)
+    if jit:
+        step_fn = jax.jit(
+            step_fn, donate_argnums=(0, 1) if donate else ()
+        )
+    history: list[dict] = []
+    rng = jax.random.PRNGKey(0)
+    for i, batch in enumerate(batches):
+        rng, sub = jax.random.split(rng)
+        state.params, state.opt_state, state.comp_state, metrics = step_fn(
+            state.params, state.opt_state, state.comp_state, batch, sub
+        )
+        metrics = {k: float(v) for k, v in metrics.items()}
+        history.append(metrics)
+        for h in hooks or []:
+            h(i, metrics)
+    return state, history

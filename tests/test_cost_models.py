@@ -1,0 +1,171 @@
+"""Cost models (Eqs. 4–9) and the adaptive repartitioning loop (Fig. 1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AppProfile,
+    AdaptiveController,
+    EnergyModel,
+    Environment,
+    ResponseTimeModel,
+    WeightedModel,
+    brute_force,
+    mcop_reference,
+    no_offloading,
+    offloading_gain,
+    paper_example_graph,
+    random_wcg,
+)
+from repro.core.cost_models import PAPER_POWERS
+
+
+def _profile(n=7, seed=0):
+    g = random_wcg(n, rng=np.random.default_rng(seed))
+    return AppProfile.from_wcg_times(g)
+
+
+def test_response_time_model_eq4():
+    prof = _profile()
+    env = Environment.symmetric(bandwidth=2.0, speedup=4.0)
+    g = ResponseTimeModel().build(prof, env)
+    assert np.allclose(g.w_cloud, prof.t_local / 4.0)       # T_c = T_l / F
+    # edge: (in_ij + out_ij)/B both directions, symmetrised
+    i, j = np.nonzero(prof.data_in)
+    if i.size:
+        a, b = i[0], j[0]
+        expect = (
+            prof.data_in[a, b] / 2.0 + prof.data_out[a, b] / 2.0
+            + prof.data_in[b, a] / 2.0 + prof.data_out[b, a] / 2.0
+        )
+        assert g.adj[a, b] == pytest.approx(expect)
+
+
+def test_energy_model_eq6_uses_paper_powers():
+    prof = _profile()
+    env = Environment.symmetric(bandwidth=1.0, speedup=2.0)
+    g = EnergyModel().build(prof, env)
+    assert np.allclose(g.w_local, PAPER_POWERS["p_compute"] * prof.t_local)
+    assert np.allclose(g.w_cloud, PAPER_POWERS["p_idle"] * prof.t_local / 2.0)
+
+
+@given(st.floats(0.0, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_weighted_model_interpolates(omega):
+    """Eq. 8: ω=1 → normalised time model; ω=0 → normalised energy model."""
+    prof = _profile()
+    env = Environment.symmetric(bandwidth=1.5, speedup=3.0)
+    gw = WeightedModel(omega).build(prof, env)
+    gt = ResponseTimeModel().build(prof, env)
+    ge = EnergyModel().build(prof, env)
+    t_norm = gt.w_local.sum()
+    e_norm = ge.w_local.sum()
+    expect = omega * gt.w_local / t_norm + (1 - omega) * ge.w_local / e_norm
+    assert np.allclose(gw.w_local, expect)
+
+
+def test_weighted_model_rejects_bad_omega():
+    with pytest.raises(ValueError):
+        WeightedModel(1.5)
+
+
+def test_offloading_gain_definition():
+    assert offloading_gain(10.0, 4.0) == pytest.approx(0.6)
+    assert offloading_gain(0.0, 4.0) == 0.0
+
+
+def test_gain_increases_with_bandwidth():
+    """Fig. 19(a): offloading gain is non-decreasing in B."""
+    prof = _profile(n=8, seed=3)
+    model = ResponseTimeModel()
+    gains = []
+    for bw in [0.1, 0.5, 1.0, 3.0, 10.0, 100.0]:
+        env = Environment.symmetric(bandwidth=bw, speedup=3.0)
+        g = model.build(prof, env)
+        res = mcop_reference(g)
+        gains.append(offloading_gain(no_offloading(g).cost, res.min_cut))
+    assert all(b >= a - 1e-9 for a, b in zip(gains, gains[1:]))
+    assert gains[-1] > 0.0
+
+
+def test_gain_increases_with_speedup():
+    """Fig. 19(b): offloading gain is non-decreasing in F."""
+    prof = _profile(n=8, seed=4)
+    model = ResponseTimeModel()
+    gains = []
+    for f in [1.01, 1.5, 2.0, 4.0, 8.0, 32.0]:
+        env = Environment.symmetric(bandwidth=3.0, speedup=f)
+        g = model.build(prof, env)
+        res = mcop_reference(g)
+        gains.append(offloading_gain(no_offloading(g).cost, res.min_cut))
+    assert all(b >= a - 1e-9 for a, b in zip(gains, gains[1:]))
+
+
+def test_energy_model_gain_exceeds_time_gain_at_moderate_bandwidth():
+    """Fig. 19: the energy objective typically benefits most (P_i ≪ P_m)."""
+    prof = _profile(n=8, seed=5)
+    env = Environment.symmetric(bandwidth=3.0, speedup=3.0)
+    gt = ResponseTimeModel().build(prof, env)
+    ge = EnergyModel().build(prof, env)
+    gain_t = offloading_gain(no_offloading(gt).cost, mcop_reference(gt).min_cut)
+    gain_e = offloading_gain(no_offloading(ge).cost, mcop_reference(ge).min_cut)
+    assert gain_e >= gain_t - 1e-9
+
+
+# ----------------------------------------------------------------------
+# Adaptive controller (paper Fig. 1 workflow)
+# ----------------------------------------------------------------------
+
+
+def test_adaptive_controller_repartitions_on_drift():
+    prof = _profile(n=8, seed=6)
+    ctl = AdaptiveController(prof, ResponseTimeModel(), threshold=0.10)
+    e1 = ctl.observe(Environment.symmetric(1.0, 3.0))
+    assert e1.repartitioned  # first observation always partitions
+    e2 = ctl.observe(Environment.symmetric(1.05, 3.0))
+    assert not e2.repartitioned  # 5% drift < 10% threshold
+    e3 = ctl.observe(Environment.symmetric(2.0, 3.0))
+    assert e3.repartitioned  # 100% drift
+
+
+def test_adaptive_controller_cooldown():
+    prof = _profile(n=8, seed=7)
+    ctl = AdaptiveController(
+        prof, ResponseTimeModel(), threshold=0.01, min_interval=3
+    )
+    ctl.observe(Environment.symmetric(1.0, 3.0))
+    e = ctl.observe(Environment.symmetric(5.0, 3.0))
+    assert not e.repartitioned  # cooldown holds even though drift is huge
+    ctl.observe(Environment.symmetric(5.0, 3.0))
+    e = ctl.observe(Environment.symmetric(5.0, 3.0))
+    assert e.repartitioned  # cooldown expired
+
+
+def test_adaptive_partition_is_fresh_mcop_after_each_repartition():
+    """After a repartition the controller's cost equals a fresh MCOP run
+    (and respects the optimum as a lower bound — MCOP is heuristic)."""
+    prof = _profile(n=7, seed=8)
+    ctl = AdaptiveController(prof, ResponseTimeModel(), threshold=0.10)
+    for bw in [0.2, 1.0, 5.0, 25.0]:
+        ev = ctl.observe(Environment.symmetric(bw, 3.0))
+        if ev.repartitioned:
+            g = ResponseTimeModel().build(prof, ev.env)
+            # controller applies the §4.3 "only when beneficial" clamp
+            expect = min(mcop_reference(g).min_cut, no_offloading(g).cost)
+            assert ev.partial_cost == pytest.approx(expect, rel=1e-9)
+            assert ev.partial_cost >= brute_force(g).cost - 1e-9
+
+
+def test_stale_partition_costs_reported_honestly():
+    """When drift stays under threshold, the cost reported is the OLD
+    placement re-priced at the NEW environment (the paper's online cost)."""
+    prof = _profile(n=7, seed=9)
+    ctl = AdaptiveController(prof, ResponseTimeModel(), threshold=0.5)
+    ctl.observe(Environment.symmetric(1.0, 3.0))
+    ev = ctl.observe(Environment.symmetric(1.3, 3.0))
+    assert not ev.repartitioned
+    g_new = ResponseTimeModel().build(prof, Environment.symmetric(1.3, 3.0))
+    assert ev.partial_cost == pytest.approx(
+        g_new.total_cost(ctl.placement.local_mask), rel=1e-12
+    )
