@@ -7,14 +7,21 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
     complexity      → Fig. 14 (runtime vs |V|, B&B comparator)
     gains           → Figs. 17–19 (schemes vs B and F; 3 cost models)
     optimality_gap  → beyond-paper: Theorem 1 gap quantification
-    mcop_backends   → §3.1 real-time requirement (ref vs jit vs Pallas)
+    mcop_backends   → §3.1 real-time requirement (ref vs jit vs batched vs Pallas)
     roofline        → §Roofline table from the dry-run artifact
+
+The mcop_backends rows are additionally appended to ``BENCH_mcop.json``
+(a bounded trajectory of runs), so backend/batching speedups can be
+tracked across commits.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
+import time
 
 from benchmarks import (
     complexity,
@@ -35,6 +42,39 @@ MODULES = {
 }
 
 
+# anchored at the repo root so the trajectory accumulates in one place
+# regardless of the invoking cwd
+_TRAJECTORY_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_mcop.json"
+_TRAJECTORY_KEEP = 50  # bounded history of runs
+
+
+def _append_trajectory(rows: list[dict], path: pathlib.Path = _TRAJECTORY_PATH) -> None:
+    """Append this run's mcop_backends rows to the trajectory artifact."""
+    doc = {"benchmark": "mcop_backends", "runs": []}
+    if path.exists():
+        try:
+            loaded = json.loads(path.read_text())
+            if isinstance(loaded.get("runs"), list):
+                doc = loaded
+        except (json.JSONDecodeError, OSError):
+            pass  # corrupt artifact: start a fresh trajectory
+    doc["runs"].append(
+        {
+            "unix_time": int(time.time()),
+            "rows": [
+                {
+                    "name": r["name"],
+                    "us_per_call": round(float(r["us_per_call"]), 2),
+                    "derived": str(r["derived"]),
+                }
+                for r in rows
+            ],
+        }
+    )
+    doc["runs"] = doc["runs"][-_TRAJECTORY_KEEP:]
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", help="comma-separated subset of benchmarks")
@@ -45,9 +85,12 @@ def main(argv=None) -> int:
     failures = 0
     for name in names:
         try:
-            for row in MODULES[name].run():
+            rows = list(MODULES[name].run())
+            for row in rows:
                 derived = str(row["derived"]).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.2f},{derived}", flush=True)
+            if name == "mcop_backends":
+                _append_trajectory(rows)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}/ERROR,0.00,{e!r}", flush=True)

@@ -3,10 +3,13 @@
 Simulates a mobile device walking through changing network conditions
 (WiFi → 3G → congested 3G → back), with the cloud occasionally degraded.
 The AdaptiveController re-runs MCOP only when drift exceeds the threshold
-and reports the paper's three schemes at every instant.  Also shows the
-cluster-scale analogue: chips failing out of a tier triggering the same
-repartition path (ElasticMeshManager) and a straggler being detected and
-drained by the HeartbeatMonitor.
+and reports the paper's three schemes at every instant.  The whole walk
+goes through the *batched* path — one ``mcop_batch`` dispatch for all
+repartition points — and a second user walking the same streets shows the
+quantized placement cache turning their repartitions into hits.  Also
+shows the cluster-scale analogue: chips failing out of a tier triggering
+the same repartition path (ElasticMeshManager) and a straggler being
+detected and drained by the HeartbeatMonitor.
 
     PYTHONPATH=src python examples/adaptive_offload.py
 """
@@ -19,6 +22,7 @@ from repro.core import (
     AdaptiveController,
     AppProfile,
     Environment,
+    PlacementCache,
     ResponseTimeModel,
     face_recognition_graph,
 )
@@ -34,8 +38,9 @@ def main():
     prof = AppProfile.from_wcg_times(
         face_recognition_graph(speedup=1.0, bandwidth_mbps=1.0)
     )
+    cache = PlacementCache()   # shared across every user of this app profile
     ctl = AdaptiveController(prof, ResponseTimeModel(), threshold=0.15,
-                             min_interval=2)
+                             min_interval=2, backend="jax", cache=cache)
     trace = [
         (8.0, 3.0, "office WiFi"),
         (7.6, 3.0, "WiFi, light load"),
@@ -45,16 +50,28 @@ def main():
         (0.3, 1.5, "cloud degraded too"),
         (6.0, 3.0, "home WiFi"),
     ]
-    print(f"{'env':<20s} {'B':>5s} {'F':>4s} {'repart':>7s} "
+    # one batched dispatch for the whole walk's repartition points
+    events = ctl.sweep([Environment.symmetric(bw, f) for bw, f, _ in trace])
+    print(f"{'env':<20s} {'B':>5s} {'F':>4s} {'repart':>7s} {'cache':>5s} "
           f"{'no-off':>8s} {'full':>8s} {'partial':>8s} {'gain':>6s}")
-    for bw, f, label in trace:
-        ev = ctl.observe(Environment.symmetric(bw, f))
+    for (bw, f, label), ev in zip(trace, events):
         print(f"{label:<20s} {bw:5.1f} {f:4.1f} {str(ev.repartitioned):>7s} "
+              f"{'hit' if ev.cache_hit else '-':>5s} "
               f"{ev.no_offload_cost:8.1f} {ev.full_offload_cost:8.1f} "
               f"{ev.partial_cost:8.1f} {ev.gain:6.1%}")
     n_repart = sum(e.repartitioned for e in ctl.history)
     print(f"→ {n_repart}/{len(trace)} observations triggered repartitioning "
-          f"(threshold+cooldown hysteresis)\n")
+          f"(threshold+cooldown hysteresis)")
+
+    # a second user on the same streets: repartitions become cache hits
+    ctl2 = AdaptiveController(prof, ResponseTimeModel(), threshold=0.15,
+                              min_interval=2, backend="jax", cache=cache)
+    events2 = ctl2.sweep([Environment.symmetric(bw, f) for bw, f, _ in trace])
+    st = cache.stats
+    print(f"→ user 2, same walk: {sum(e.cache_hit for e in events2)}"
+          f"/{sum(e.repartitioned for e in events2)} repartitions served "
+          f"from cache; totals hits={st.hits} misses={st.misses} "
+          f"hit_rate={st.hit_rate:.0%}\n")
 
     # ---- the cluster-scale analogue -----------------------------------
     print("=== Elastic fleet: chip loss re-prices the speedup factor ====")

@@ -10,7 +10,15 @@ from repro.core.graph import (
     random_wcg,
     tree_graph,
 )
-from repro.core.mcop import MCOPResult, PhaseRecord, mcop, mcop_jax, mcop_reference
+from repro.core.mcop import (
+    MCOPResult,
+    PhaseRecord,
+    mcop,
+    mcop_batch,
+    mcop_jax,
+    mcop_reference,
+)
+from repro.core.placement_cache import CacheStats, EnvQuantizer, PlacementCache
 from repro.core.baselines import (
     PartitionResult,
     branch_and_bound,
@@ -43,8 +51,12 @@ __all__ = [
     "MCOPResult",
     "PhaseRecord",
     "mcop",
+    "mcop_batch",
     "mcop_jax",
     "mcop_reference",
+    "CacheStats",
+    "EnvQuantizer",
+    "PlacementCache",
     "PartitionResult",
     "branch_and_bound",
     "brute_force",

@@ -13,19 +13,28 @@ Hysteresis: re-partitioning is itself a cost (recompilation/resharding in
 our setting; process migration in the paper's), so the controller only
 acts on *relative* drift above ``threshold`` and enforces a cooldown of
 ``min_interval`` environment updates between repartitions.
+
+Throughput: :meth:`AdaptiveController.sweep` is the batched entry point.
+Repartition decisions depend only on the environment trace (drift +
+cooldown), never on solver output, so a sweep can decide every step up
+front, solve all repartition points in ONE ``mcop_batch`` dispatch, and
+serve repeats from a :class:`~repro.core.placement_cache.PlacementCache`
+keyed on quantized environment bins.  With ``cache=None`` the sweep is
+bit-identical to calling :meth:`observe` per environment.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
 from repro.core import baselines
 from repro.core.cost_models import AppProfile, CostModel, Environment, offloading_gain
 from repro.core.graph import WCG
-from repro.core.mcop import MCOPResult, mcop
+from repro.core.mcop import MCOPResult, mcop, mcop_batch
+from repro.core.placement_cache import PlacementCache
 
 __all__ = ["EnvironmentDrift", "AdaptiveController", "AdaptationEvent"]
 
@@ -40,6 +49,7 @@ class AdaptationEvent:
     full_offload_cost: float
     gain: float
     repartitioned: bool
+    cache_hit: bool = False
 
 
 class EnvironmentDrift:
@@ -55,15 +65,22 @@ class EnvironmentDrift:
     def exceeded(self, env: Environment) -> bool:
         if self._anchor is None:
             return True
-        a = self._anchor
+        return self.exceeded_between(self._anchor, env, self.threshold)
+
+    @staticmethod
+    def exceeded_between(
+        anchor: Environment, env: Environment, threshold: float
+    ) -> bool:
+        """Stateless drift test — also used by the batched sweep's decision
+        pre-pass, which simulates anchor updates without mutating state."""
 
         def rel(new: float, old: float) -> float:
             return abs(new - old) / max(abs(old), 1e-30)
 
         return (
-            rel(env.bandwidth_up, a.bandwidth_up) > self.threshold
-            or rel(env.bandwidth_down, a.bandwidth_down) > self.threshold
-            or rel(env.speedup, a.speedup) > self.threshold
+            rel(env.bandwidth_up, anchor.bandwidth_up) > threshold
+            or rel(env.bandwidth_down, anchor.bandwidth_down) > threshold
+            or rel(env.speedup, anchor.speedup) > threshold
         )
 
 
@@ -75,7 +92,11 @@ class AdaptiveController:
       cost_model:  which objective (time / energy / weighted).
       threshold:   relative drift that triggers re-partitioning.
       min_interval: cooldown in observe() calls between repartitions.
-      backend:     MCOP backend ("reference" or "jax").
+      backend:     MCOP backend ("reference", "jax" or "pallas").
+      cache:       optional PlacementCache; repartitions whose quantized
+                   environment was solved before reuse the cached mask
+                   (re-priced at the exact current environment).  Share one
+                   cache across controllers that partition the same profile.
     """
 
     def __init__(
@@ -86,41 +107,38 @@ class AdaptiveController:
         threshold: float = 0.10,
         min_interval: int = 1,
         backend: str = "reference",
+        cache: PlacementCache | None = None,
     ):
         self.profile = profile
         self.cost_model = cost_model
         self.drift = EnvironmentDrift(threshold)
         self.min_interval = min_interval
         self.backend = backend
+        self.cache = cache
         self._steps_since = 10**9
         self._step = 0
         self._current: MCOPResult | None = None
         self.history: list[AdaptationEvent] = []
 
     # ------------------------------------------------------------------
-    def observe(self, env: Environment) -> AdaptationEvent:
-        """Feed one environment measurement; repartition if warranted."""
-        self._step += 1
-        self._steps_since += 1
-        g = self.cost_model.build(self.profile, env)
-        repartition = (
-            self._current is None
-            or (self.drift.exceeded(env) and self._steps_since >= self.min_interval)
+    def _clamp(self, g: WCG, candidate: MCOPResult) -> MCOPResult:
+        """Paper §4.3: only partition when beneficial (shared clamp)."""
+        return baselines.clamp_no_offloading(g, candidate)
+
+    def _reprice(self, g: WCG, mask: np.ndarray) -> MCOPResult:
+        """A cached mask is re-priced at the exact current WCG — costs stay
+        honest even though the placement came from a same-bin neighbor."""
+        mask = np.asarray(mask, dtype=bool)
+        return MCOPResult(min_cut=g.total_cost(mask), local_mask=mask, phases=[])
+
+    def _repartition_due(self, env: Environment) -> bool:
+        return self._current is None or (
+            self.drift.exceeded(env) and self._steps_since >= self.min_interval
         )
-        if repartition:
-            candidate = mcop(g, backend=self.backend)
-            # paper §4.3: only partition when beneficial — compare against
-            # the all-local plan (MCOP's phase cuts never return it).
-            no_off = baselines.no_offloading(g)
-            if no_off.cost < candidate.min_cut:
-                candidate = MCOPResult(
-                    min_cut=no_off.cost,
-                    local_mask=no_off.local_mask,
-                    phases=candidate.phases,
-                )
-            self._current = candidate
-            self.drift.anchor(env)
-            self._steps_since = 0
+
+    def _emit(
+        self, g: WCG, env: Environment, repartitioned: bool, cache_hit: bool
+    ) -> AdaptationEvent:
         assert self._current is not None
         # Cost of the *current* placement under the *new* environment: if we
         # chose not to repartition, we still pay today's prices.
@@ -135,16 +153,140 @@ class AdaptiveController:
             no_offload_cost=no_off,
             full_offload_cost=full,
             gain=offloading_gain(no_off, partial),
-            repartitioned=repartition,
+            repartitioned=repartitioned,
+            cache_hit=cache_hit,
         )
         self.history.append(event)
         return event
 
     # ------------------------------------------------------------------
-    def sweep(
-        self, envs: list[Environment]
-    ) -> list[AdaptationEvent]:
-        return [self.observe(e) for e in envs]
+    def observe(self, env: Environment) -> AdaptationEvent:
+        """Feed one environment measurement; repartition if warranted."""
+        self._step += 1
+        self._steps_since += 1
+        g = self.cost_model.build(self.profile, env)
+        repartition = self._repartition_due(env)
+        cache_hit = False
+        if repartition:
+            candidate = None
+            if self.cache is not None:
+                mask = self.cache.get(env, expected_n=g.n)
+                if mask is not None:
+                    candidate = self._clamp(g, self._reprice(g, mask))
+                    cache_hit = True
+            if candidate is None:
+                candidate = self._clamp(g, mcop(g, backend=self.backend))
+                if self.cache is not None:
+                    self.cache.put(env, candidate.local_mask)
+            self._current = candidate
+            self.drift.anchor(env)
+            self._steps_since = 0
+        return self._emit(g, env, repartition, cache_hit)
+
+    # ------------------------------------------------------------------
+    def sweep(self, envs: Sequence[Environment]) -> list[AdaptationEvent]:
+        """Batched Fig.-1 loop: one ``mcop_batch`` dispatch per sweep.
+
+        Semantics match calling :meth:`observe` per environment (identical
+        events when ``cache is None``), but all repartition points are
+        solved together: pass 1 replays the drift/cooldown decision
+        sequence (which never depends on solver output), pass 2 resolves
+        each repartition from the cache or the batched solve, pass 3
+        emits events with the usual stale-placement repricing.
+
+        Exact cache-counter parity with the serial loop assumes the cache
+        capacity exceeds the number of distinct environment bins in one
+        sweep (all lookups happen before the batch's stores, so a cache
+        small enough to evict *within* a sweep sees slightly fewer misses
+        than serial observe would).  The default capacity (4096) is far
+        above any realistic per-sweep bin count.
+        """
+        envs = list(envs)
+        # ---- pass 1: decide repartition steps without solving ----------
+        steps_since = self._steps_since
+        anchor = self.drift._anchor
+        have_current = self._current is not None
+        decisions: list[bool] = []
+        for env in envs:
+            steps_since += 1
+            exceeded = anchor is None or EnvironmentDrift.exceeded_between(
+                anchor, env, self.drift.threshold
+            )
+            repart = (not have_current) or (
+                exceeded and steps_since >= self.min_interval
+            )
+            decisions.append(repart)
+            if repart:
+                anchor = env
+                steps_since = 0
+                have_current = True
+
+        # ---- pass 2: resolve each repartition (cache or batched solve) -
+        graphs = [self.cost_model.build(self.profile, e) for e in envs]
+        # per repartition step: ("mask", mask) — cache hit; ("solve", slot)
+        # — own batched solve; ("reuse", slot) — same-bin reuse in-sweep
+        source: dict[int, tuple] = {}
+        solve_steps: list[int] = []
+        pending: dict[tuple, int] = {}  # quantized key -> solve slot
+        for i, env in enumerate(envs):
+            if not decisions[i]:
+                continue
+            if self.cache is None:
+                source[i] = ("solve", len(solve_steps))
+                solve_steps.append(i)
+                continue
+            key = self.cache.key(env)
+            mask = self.cache.lookup(key, expected_n=graphs[i].n)
+            if mask is not None:
+                self.cache.record(True)
+                source[i] = ("mask", mask)
+            elif key in pending:
+                # an earlier step this sweep already scheduled this bin; in
+                # the serial loop its put() would have made this a hit
+                self.cache.record(True)
+                source[i] = ("reuse", pending[key])
+            else:
+                self.cache.record(False)
+                slot = len(solve_steps)
+                solve_steps.append(i)
+                pending[key] = slot
+                source[i] = ("solve", slot)
+        solved = (
+            mcop_batch([graphs[i] for i in solve_steps], backend=self.backend)
+            if solve_steps
+            else []
+        )
+        clamped_solved = [
+            self._clamp(graphs[solve_steps[s]], r) for s, r in enumerate(solved)
+        ]
+        if self.cache is not None:
+            for key, slot in pending.items():
+                self.cache.store(key, clamped_solved[slot].local_mask)
+
+        # ---- pass 3: emit events, updating state exactly like observe --
+        events: list[AdaptationEvent] = []
+        for i, env in enumerate(envs):
+            self._step += 1
+            self._steps_since += 1
+            g = graphs[i]
+            cache_hit = False
+            if decisions[i]:
+                kind, payload = source[i]
+                if kind == "mask":
+                    self._current = self._clamp(g, self._reprice(g, payload))
+                    cache_hit = True
+                elif kind == "solve":
+                    self._current = clamped_solved[payload]
+                else:  # "reuse": the serial loop would have hit the first
+                    # same-bin step's put() — reprice its mask here
+                    self._current = self._clamp(
+                        g, self._reprice(g, clamped_solved[payload].local_mask)
+                    )
+                    cache_hit = True
+                self.drift.anchor(env)
+                self._steps_since = 0
+            events.append(self._emit(g, env, decisions[i], cache_hit))
+        return events
 
     @property
     def placement(self) -> MCOPResult:

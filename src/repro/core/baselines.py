@@ -32,6 +32,7 @@ __all__ = [
     "PartitionResult",
     "no_offloading",
     "full_offloading",
+    "clamp_no_offloading",
     "brute_force",
     "branch_and_bound",
     "maxflow_optimal",
@@ -60,6 +61,28 @@ def full_offloading(g: WCG) -> PartitionResult:
     """Everything offloadable goes to the cloud (unoffloadables stay)."""
     mask = ~g.offloadable
     return PartitionResult(cost=g.total_cost(mask), local_mask=mask)
+
+
+def clamp_no_offloading(g: WCG, result):
+    """Paper §4.3: "we only actually perform the partitioning when it is
+    beneficial" — MCOP's phase cuts always offload a non-empty set, so the
+    all-local plan must be compared explicitly (Fig. 17's partial curve
+    coinciding with no-offloading at low bandwidth).
+
+    Takes and returns an :class:`~repro.core.mcop.MCOPResult`; shared by
+    the adaptive controller and the placement mapper so the two paths can
+    never disagree about when offloading is beneficial.
+    """
+    from repro.core.mcop import MCOPResult  # deferred: avoid import cycle
+
+    no_off = no_offloading(g)
+    if no_off.cost < result.min_cut:
+        return MCOPResult(
+            min_cut=no_off.cost,
+            local_mask=no_off.local_mask,
+            phases=result.phases,
+        )
+    return result
 
 
 # ----------------------------------------------------------------------

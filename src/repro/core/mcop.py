@@ -1,29 +1,51 @@
 """MCOP — the paper's Min-Cost Offloading Partitioning algorithm (§5).
 
-Two implementations, one contract:
-
-* :func:`mcop_reference` — a line-by-line transcription of the paper's
-  Algorithms 1–3 (Merge / MinCut / MinCutPhase) in pure numpy.  It keeps a
-  full per-phase trace (induced vertex orderings, cut-of-the-phase values,
-  merged memberships) so tests can check the paper's §5.5 case study
-  *exactly*, phase by phase.
-
-* :func:`mcop_jax` — a dense, fully jittable JAX implementation built on
-  ``lax.fori_loop``.  Vertices are never physically removed; merging is a
-  masked row/column fold, membership is a boolean matrix, and the inner
-  most-tightly-connected-vertex scan is a masked argmax.  Complexity is
-  O(|V|³) dense work, which on the target hardware is VPU/MXU-friendly and
-  lets the partitioner run *inside* a jitted training/serving loop — the
-  paper's "real-time online algorithm" requirement (§3.1) without host
-  round-trips.  For the graph sizes the paper studies (tens to a few
-  thousand vertices) dense O(V³) easily beats the constant factors of
-  pointer-chasing implementations.
-
-Both return the minimum over phases of the paper's Eq. 10 cut value
+All implementations share one contract: the minimum over phases of the
+paper's Eq. 10 cut value
 
     C_cut(A−t, t) = C_local − [w_local(t) − w_cloud(t)] + Σ_{v∈A∖t} w(e(t,v))
 
 together with the induced placement (True = execute locally).
+
+Backend-selection story — when each wins:
+
+* :func:`mcop_reference` (``backend="reference"``) — a line-by-line numpy
+  transcription of Algorithms 1–3 (Merge / MinCut / MinCutPhase).  It keeps
+  a full per-phase trace (induced vertex orderings, cut-of-the-phase
+  values, merged memberships) so tests can check the paper's §5.5 case
+  study *exactly*, phase by phase.  Use it for a single graph when you
+  want the trace, f64 arithmetic, or are debugging; it is the semantic
+  oracle everything else is tested against.
+
+* :func:`mcop_jax` (``backend="jax"``) — a dense, fully jittable JAX
+  implementation built on ``lax.fori_loop``.  Vertices are never
+  physically removed; merging is a masked row/column fold, membership is a
+  boolean matrix, and the inner most-tightly-connected-vertex scan is a
+  masked argmax.  O(|V|³) dense work is VPU/MXU-friendly and lets the
+  partitioner run *inside* a jitted training/serving loop — the paper's
+  "real-time online algorithm" requirement (§3.1) without host
+  round-trips.  Use it for one graph per call on-device.
+
+* :func:`mcop_batch` — the throughput path.  Pads a heterogeneous list of
+  graphs into static shape *buckets* (default 16/64/256 vertices) and
+  ``vmap``s the jitted solver per bucket, so N environment points or N
+  concurrent requests compile to ONE XLA program per bucket rather than N
+  traces, and execute as one dispatch.  Amortizes dispatch overhead and
+  keeps the batch resident on-device; this is what
+  ``AdaptiveController.sweep`` and the placement tier sweep call.
+
+* ``mcop_batch(..., backend="pallas")`` — same bucketing, but each bucket
+  runs ``repro.kernels.mcop_phase.mcop_stoer_wagner_kernel``: the full
+  |V|−1-phase solve (merges included) inside one Pallas kernel with a
+  grid dimension over the batch, so the adjacency is loaded HBM→VMEM once
+  per solve.  Wins on TPU where the phase loop is bandwidth-bound on
+  adjacency row reads; on CPU it falls back to interpret mode (correct
+  but slow — benchmark numbers there are indicative only).
+
+Padding semantics: padded vertices carry zero weights, zero edges, and
+are marked *pinned*, so the anchor fold absorbs them with no effect on
+any phase cut; graphs with no unoffloadable vertex are anchored at vertex
+0, matching :func:`mcop_reference`.
 """
 
 from __future__ import annotations
@@ -43,7 +65,9 @@ __all__ = [
     "MCOPResult",
     "mcop_reference",
     "mcop_jax",
+    "mcop_batch",
     "mcop",
+    "DEFAULT_BUCKETS",
 ]
 
 _NEG_INF = -1e30
@@ -325,10 +349,193 @@ def mcop_jax(g: WCG) -> MCOPResult:
     )
 
 
+# ======================================================================
+# Batched solver — static shape buckets, one XLA program per bucket.
+# ======================================================================
+
+DEFAULT_BUCKETS = (16, 64, 256)
+
+
+@jax.jit
+def _mcop_batch_impl(adj, w_local, w_cloud, pinned):
+    """Batch-optimized single-graph solver (vmapped below).
+
+    Same algorithm as :func:`_mcop_jax_impl`, restructured for throughput:
+
+    * ``lax.while_loop`` instead of fixed-bound ``fori_loop`` for both the
+      phase loop and the inner MTCV scan — JAX's while batching rule masks
+      finished lanes automatically, so each graph does exactly
+      Σ(n_alive−1) absorptions instead of (n−1)² and padded vertices cost
+      nothing (they are folded into the anchor before the first phase).
+    * merged-group membership is a per-vertex representative *label*
+      (union-find with full path compression: every merge relabels in
+      O(n)) instead of the O(n²) boolean membership matrix, which would
+      otherwise dominate the while-loop carry at n ≳ 128.
+    """
+    n = adj.shape[0]
+    c_local_total = w_local.sum()
+    adj, w_local, w_cloud, alive, _, src = _fold_pinned(
+        adj, w_local, w_cloud, pinned
+    )
+    idx = jnp.arange(n)
+    label = jnp.where(pinned | ~alive, src, idx)
+
+    def phase_body(carry):
+        adj, wl, wc, alive, label, src, best_cut, best_cloud = carry
+        n_alive = alive.sum()
+        gains = wl - wc
+
+        # ---- inner MTCV scan (Algorithm 3), exactly n_alive−1 steps ----
+        def acond(inner):
+            return inner[0] < n_alive - 1
+
+        def abody(inner):
+            i, in_a, conn, s_reg, t_reg = inner
+            cand = alive & ~in_a
+            scores = jnp.where(cand, conn - gains, _NEG_INF)
+            v = jnp.argmax(scores)
+            return (i + 1, in_a | (idx == v), conn + adj[v], t_reg, v)
+
+        in_a0 = alive & (idx == src)
+        _, _, _, s_reg, t_reg = jax.lax.while_loop(
+            acond, abody, (jnp.int32(0), in_a0, adj[src], src, src)
+        )
+
+        # ---- Eq. 10 cut-of-the-phase (outer cond guarantees validity) --
+        comm = (adj[t_reg] * alive).sum()
+        cut = c_local_total - gains[t_reg] + comm
+        cloud_t = label == t_reg
+        improved = cut < best_cut
+        best_cut = jnp.where(improved, cut, best_cut)
+        best_cloud = jnp.where(improved, cloud_t, best_cloud)
+
+        # ---- Algorithm 1 merge of (s, t) -------------------------------
+        t_row = adj[t_reg]
+        adj2 = adj.at[s_reg, :].add(t_row)
+        adj2 = adj2.at[:, s_reg].add(t_row)
+        adj2 = adj2.at[s_reg, s_reg].set(0.0)
+        tmask = idx == t_reg
+        adj2 = adj2 * (~tmask[:, None]) * (~tmask[None, :])
+        wl2 = wl.at[s_reg].add(wl[t_reg]).at[t_reg].set(0.0)
+        wc2 = wc.at[s_reg].add(wc[t_reg]).at[t_reg].set(0.0)
+        alive2 = alive & ~tmask
+        label2 = jnp.where(cloud_t, s_reg, label)
+        src = jnp.where(t_reg == src, s_reg, src)
+        return adj2, wl2, wc2, alive2, label2, src, best_cut, best_cloud
+
+    def pcond(carry):
+        return carry[3].sum() > 1  # alive count
+
+    carry0 = (
+        adj, w_local, w_cloud, alive, label, src,
+        jnp.asarray(_POS_INF, adj.dtype), jnp.zeros(n, dtype=bool),
+    )
+    out = jax.lax.while_loop(pcond, phase_body, carry0)
+    best_cut, best_cloud = out[6], out[7]
+    return best_cut, ~best_cloud  # local mask
+
+
+# vmap over the batch-optimized solver; jit caches one executable per
+# (bucket_n, batch) shape pair.
+_mcop_jax_batch = jax.jit(jax.vmap(_mcop_batch_impl))
+
+
+def _bucket_size(n: int, buckets: Sequence[int]) -> int:
+    for b in sorted(buckets):
+        if n <= b:
+            return int(b)
+    # beyond the largest bucket: 64-align so stragglers still share programs
+    return int(-(-n // 64) * 64)
+
+
+def _pack_bucket(
+    graphs: Sequence[WCG], m: int, dtype
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Zero-pad a bucket of WCGs to m vertices in preallocated batch
+    buffers; padding is pinned so the anchor fold absorbs it without
+    touching any cut value (see module docstring)."""
+    b = len(graphs)
+    adj = np.zeros((b, m, m), dtype)
+    wl = np.zeros((b, m), dtype)
+    wc = np.zeros((b, m), dtype)
+    pinned = np.ones((b, m), dtype=bool)
+    for i, g in enumerate(graphs):
+        n = g.n
+        adj[i, :n, :n] = g.adj
+        wl[i, :n] = g.w_local
+        wc[i, :n] = g.w_cloud
+        pinned[i, :n] = ~g.offloadable
+        if not pinned[i, :n].any():
+            pinned[i, 0] = True  # anchor at vertex 0, matching mcop_reference
+    return adj, wl, wc, pinned
+
+
+def mcop_batch(
+    graphs: Sequence[WCG],
+    *,
+    backend: str = "jax",
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+    interpret: bool | None = None,
+) -> list[MCOPResult]:
+    """Solve many MCOP instances at once; results in input order.
+
+    Graphs are grouped by the smallest bucket size that fits them and each
+    bucket is solved as a single device dispatch — a ``vmap`` of the jitted
+    solver (``backend="jax"``) or one grid-over-batch Pallas kernel call
+    (``backend="pallas"``).  ``backend="reference"`` loops the numpy oracle
+    (for testing/parity).  ``interpret`` only affects the Pallas backend.
+    """
+    graphs = list(graphs)
+    if backend == "reference":
+        return [mcop_reference(g) for g in graphs]
+    if backend not in ("jax", "pallas"):
+        raise ValueError(f"unknown MCOP batch backend: {backend!r}")
+    dtype = (
+        np.float64
+        if backend == "jax" and jax.config.jax_enable_x64
+        else np.float32
+    )
+
+    by_bucket: dict[int, list[int]] = {}
+    for i, g in enumerate(graphs):
+        by_bucket.setdefault(_bucket_size(g.n, buckets), []).append(i)
+
+    results: list[MCOPResult | None] = [None] * len(graphs)
+    for m, idxs in sorted(by_bucket.items()):
+        adj, wl, wc, pin = (
+            jnp.asarray(a) for a in _pack_bucket([graphs[i] for i in idxs], m, dtype)
+        )
+        if backend == "jax":
+            cuts, masks = _mcop_jax_batch(adj, wl, wc, pin)
+        else:
+            # deferred: keep core importable without pulling kernel deps
+            from repro.kernels.mcop_phase import mcop_stoer_wagner_kernel
+
+            cuts, masks = mcop_stoer_wagner_kernel(
+                adj, wl, wc, pin, interpret=interpret
+            )
+        cuts, masks = jax.device_get((cuts, masks))  # one host sync
+        for row, i in enumerate(idxs):
+            results[i] = MCOPResult(
+                min_cut=float(cuts[row]),
+                local_mask=masks[row, : graphs[i].n].copy(),
+                phases=[],
+            )
+    return results  # type: ignore[return-value]
+
+
 def mcop(g: WCG, *, backend: str = "reference") -> MCOPResult:
-    """Front door used by the rest of the framework."""
+    """Front door used by the rest of the framework.
+
+    Backends: ``"reference"`` (numpy oracle with per-phase trace),
+    ``"jax"`` (jitted dense solver), ``"pallas"`` (single-graph batch
+    through the full Stoer–Wagner kernel).  For many graphs per call use
+    :func:`mcop_batch`.
+    """
     if backend == "reference":
         return mcop_reference(g)
     if backend == "jax":
         return mcop_jax(g)
+    if backend == "pallas":
+        return mcop_batch([g], backend="pallas")[0]
     raise ValueError(f"unknown MCOP backend: {backend!r}")

@@ -19,6 +19,10 @@ mapper produces:
 Tier and stage descriptions are deliberately analytic (FLOPs, bytes) so
 the same machinery serves the dry-run (no hardware) and a real cluster
 (profiled numbers swap in transparently — same WCG shape).
+
+For sweeps over link conditions (elastic events, bandwidth forecasts),
+:func:`plan_placement_batch` solves every point in one ``mcop_batch``
+dispatch instead of one MCOP trace per point.
 """
 
 from __future__ import annotations
@@ -30,7 +34,7 @@ import numpy as np
 
 from repro.core import baselines
 from repro.core.graph import WCG
-from repro.core.mcop import MCOPResult, mcop
+from repro.core.mcop import MCOPResult, mcop, mcop_batch
 
 __all__ = [
     "TierSpec",
@@ -39,6 +43,7 @@ __all__ = [
     "build_stage_wcg",
     "PlacementPlan",
     "plan_placement",
+    "plan_placement_batch",
 ]
 
 
@@ -187,6 +192,23 @@ def _contiguous_refinement(g: WCG) -> tuple[int, float]:
     return best_b, float(best_cost)
 
 
+def _finalize_plan(g: WCG, result: MCOPResult, bw: float) -> PlacementPlan:
+    """Partition result → executable plan (tiering, contiguity, cut bytes)."""
+    tier = (~result.local_mask).astype(np.int32)
+    boundary, contig_cost = _contiguous_refinement(g)
+    cut = result.local_mask[:, None] != result.local_mask[None, :]
+    cut_bytes = float((g.adj * cut).sum() / 2.0 * bw)
+    return PlacementPlan(
+        stage_tier=tier,
+        mcop_cost=float(result.min_cut),
+        contiguous_boundary=boundary,
+        contiguous_cost=contig_cost,
+        contiguity_penalty=float(contig_cost - result.min_cut),
+        cut_bytes=cut_bytes,
+        result=result,
+    )
+
+
 def plan_placement(
     stages: Sequence[StageSpec],
     tier_local: TierSpec,
@@ -206,29 +228,36 @@ def plan_placement(
         pr = baselines.maxflow_optimal(g)
         result = MCOPResult(min_cut=pr.cost, local_mask=pr.local_mask, phases=[])
     else:
-        result = mcop(g, backend=backend)
-        # paper §4.3: "we only actually perform the partitioning when it is
-        # beneficial" — MCOP's phase cuts always offload a non-empty set, so
-        # the all-local plan must be compared explicitly (Fig. 17's partial
-        # curve coinciding with no-offloading at low bandwidth).
-        no_off = baselines.no_offloading(g)
-        if no_off.cost < result.min_cut:
-            result = MCOPResult(
-                min_cut=no_off.cost, local_mask=no_off.local_mask, phases=result.phases
-            )
-    tier = (~result.local_mask).astype(np.int32)
-    boundary, contig_cost = _contiguous_refinement(g)
-
-    cut = result.local_mask[:, None] != result.local_mask[None, :]
+        result = baselines.clamp_no_offloading(g, mcop(g, backend=backend))
     bw = inter_tier_bw or min(tier_local.link_bw, tier_remote.link_bw)
-    cut_bytes = float((g.adj * cut).sum() / 2.0 * bw)
+    return _finalize_plan(g, result, bw)
 
-    return PlacementPlan(
-        stage_tier=tier,
-        mcop_cost=float(result.min_cut),
-        contiguous_boundary=boundary,
-        contiguous_cost=contig_cost,
-        contiguity_penalty=float(contig_cost - result.min_cut),
-        cut_bytes=cut_bytes,
-        result=result,
-    )
+
+def plan_placement_batch(
+    stages: Sequence[StageSpec],
+    tier_local: TierSpec,
+    tier_remote: TierSpec,
+    *,
+    inter_tier_bws: Sequence[float],
+    backend: str = "jax",
+) -> list[PlacementPlan]:
+    """Tier sweep: one plan per inter-tier bandwidth, solved in ONE batch.
+
+    The elastic/adaptive loops re-plan as link conditions change; sweeping
+    candidate bandwidths (or forecast bands) through ``mcop_batch`` costs
+    one device dispatch for the whole sweep instead of one trace per
+    point.  Results match calling :func:`plan_placement` per bandwidth.
+    """
+    # same None/0 fallback plan_placement applies, so results really match
+    bws = [
+        bw or min(tier_local.link_bw, tier_remote.link_bw) for bw in inter_tier_bws
+    ]
+    gs = [
+        build_stage_wcg(stages, tier_local, tier_remote, inter_tier_bw=bw)
+        for bw in bws
+    ]
+    results = mcop_batch(gs, backend=backend)
+    return [
+        _finalize_plan(g, baselines.clamp_no_offloading(g, r), bw)
+        for g, r, bw in zip(gs, results, bws)
+    ]

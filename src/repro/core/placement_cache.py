@@ -1,0 +1,174 @@
+"""Placement cache keyed on quantized environment parameters.
+
+The adaptive loop (paper Fig. 1) re-partitions whenever the environment
+drifts, but at serving scale the *same* environments recur constantly:
+millions of users cycle through a handful of bandwidth/RTT/energy regimes
+(WiFi, LTE, congested cell, …).  Re-running MCOP for every request wastes
+the work — a placement computed at B = 8.0 MB/s is equally valid at
+B = 8.2 MB/s, because the controller's own drift threshold already treats
+those as "the same environment".
+
+So the cache key is the environment *quantized* into geometric bins whose
+relative width (default 10%) mirrors the drift threshold: two environments
+land in the same bin exactly when re-partitioning between them would be
+hysteresis noise.  The cached value is the placement *mask only* — on a
+hit the caller re-prices the mask under the exact current WCG
+(``g.total_cost(mask)``), so reported costs stay honest even when the
+placement is reused (same contract as the controller's stale-placement
+accounting).
+
+Hit/miss counters make cache effectiveness observable; capacity is
+bounded with LRU eviction so a long-lived server can't grow without
+limit.  One cache instance should serve one (profile, cost-model)
+pair — share it across controllers only when they partition the same
+application (that is the multi-user win: N users, one profile, a handful
+of environment bins).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import OrderedDict
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.cost_models import Environment
+
+__all__ = ["EnvQuantizer", "PlacementCache", "CacheStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvQuantizer:
+    """Maps an :class:`Environment` to a hashable bin key.
+
+    Positive scalars are binned geometrically: ``bin(x) = round(ln x / ln
+    (1 + rel_step))``, so bins are uniformly ``rel_step`` wide in relative
+    terms at every scale — the natural metric for bandwidth/speedup, which
+    the drift detector also compares relatively.  Powers enter the key too
+    (the energy model prices transfers with them), with the same binning.
+    """
+
+    rel_step: float = 0.10
+
+    def bin(self, x: float) -> int:
+        if x <= 0.0:
+            return -(2**31)  # degenerate env; one shared bin
+        return round(math.log(x) / math.log1p(self.rel_step))
+
+    def key(self, env: Environment) -> Tuple[int, ...]:
+        return (
+            self.bin(env.bandwidth_up),
+            self.bin(env.bandwidth_down),
+            self.bin(env.speedup),
+            self.bin(env.p_compute),
+            self.bin(env.p_idle),
+            self.bin(env.p_transfer),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheStats:
+    hits: int
+    misses: int
+    size: int
+    capacity: int
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+class PlacementCache:
+    """Quantized-environment → placement-mask cache with LRU eviction.
+
+    ``get``/``put`` are the simple front door.  The batched sweep needs to
+    separate *lookup* from *accounting* (a miss early in a sweep becomes a
+    hit for later same-bin steps once the batch solve lands), so
+    :meth:`lookup` and :meth:`record` are also public.
+    """
+
+    def __init__(
+        self,
+        quantizer: EnvQuantizer | None = None,
+        *,
+        capacity: int = 4096,
+    ):
+        if capacity <= 0:
+            raise ValueError("cache capacity must be positive")
+        self.quantizer = quantizer or EnvQuantizer()
+        self.capacity = capacity
+        self._entries: OrderedDict[Tuple[int, ...], np.ndarray] = OrderedDict()
+        self._hits = 0
+        self._misses = 0
+
+    # -- key/lookup/record primitives ----------------------------------
+    def key(self, env: Environment) -> Tuple[int, ...]:
+        return self.quantizer.key(env)
+
+    def lookup(
+        self, key: Tuple[int, ...], expected_n: int | None = None
+    ) -> np.ndarray | None:
+        """Return the cached local-mask for ``key`` (no counter update).
+
+        ``expected_n`` guards against a cache (mis)shared across profiles
+        of different graph sizes: a wrong-length mask is treated as
+        absent, so callers never have to re-validate shapes.
+        """
+        mask = self._entries.get(key)
+        if mask is None:
+            return None
+        if expected_n is not None and mask.shape != (expected_n,):
+            return None
+        self._entries.move_to_end(key)
+        return mask.copy()
+
+    def record(self, hit: bool) -> None:
+        if hit:
+            self._hits += 1
+        else:
+            self._misses += 1
+
+    def store(self, key: Tuple[int, ...], local_mask: np.ndarray) -> None:
+        self._entries[key] = np.asarray(local_mask, dtype=bool).copy()
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    # -- convenience front door ----------------------------------------
+    def get(
+        self, env: Environment, expected_n: int | None = None
+    ) -> np.ndarray | None:
+        """Counted lookup by environment; a wrong-length mask is a miss."""
+        mask = self.lookup(self.key(env), expected_n)
+        self.record(mask is not None)
+        return mask
+
+    def put(self, env: Environment, local_mask: np.ndarray) -> None:
+        self.store(self.key(env), local_mask)
+
+    # -- observability --------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Tuple[int, ...]) -> bool:
+        return key in self._entries
+
+    @property
+    def stats(self) -> CacheStats:
+        return CacheStats(
+            hits=self._hits,
+            misses=self._misses,
+            size=len(self._entries),
+            capacity=self.capacity,
+        )
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._hits = 0
+        self._misses = 0

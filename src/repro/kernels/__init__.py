@@ -1,14 +1,34 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
-Three kernels, each with a pure-jnp oracle in ``ref.py`` and a jit'd
-public wrapper in ``ops.py``:
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper
+in ``ops.py``:
 
 * ``flash_attention`` — online-softmax attention (causal/full/window, GQA)
 * ``mamba_chunk_scan`` — Mamba2 SSD chunked selective scan
-* ``mcop_phase``       — the paper's MinCutPhase inner loop (MCOP on-device)
+* ``mcop_phase``       — the paper's MinCutPhase inner loop (host phase loop)
+* ``mcop_stoer_wagner_kernel`` — full batched MCOP: all phases + merges in
+  one kernel invocation, grid over graphs (see ``core.mcop.mcop_batch``)
+
+``default_interpret`` picks interpret-vs-compiled once per process from the
+JAX backend; all kernel wrappers accept ``interpret=None`` to mean "auto".
 """
 
-from repro.kernels.ops import flash_attention, mamba_chunk_scan, mcop_min_cut, on_tpu
+from repro.kernels.ops import (
+    default_interpret,
+    flash_attention,
+    mamba_chunk_scan,
+    mcop_min_cut,
+    on_tpu,
+)
+from repro.kernels.mcop_phase import mcop_stoer_wagner_kernel
 from repro.kernels import ref
 
-__all__ = ["flash_attention", "mamba_chunk_scan", "mcop_min_cut", "on_tpu", "ref"]
+__all__ = [
+    "flash_attention",
+    "mamba_chunk_scan",
+    "mcop_min_cut",
+    "mcop_stoer_wagner_kernel",
+    "default_interpret",
+    "on_tpu",
+    "ref",
+]

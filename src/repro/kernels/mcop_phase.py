@@ -1,28 +1,53 @@
-"""Pallas TPU kernel for one MCOP *MinCutPhase* (paper Algorithm 3).
+"""Pallas TPU kernels for MCOP (paper Algorithms 1–3) — phase and full solver.
 
-The phase's hot loop is the Most-Tightly-Connected-Vertex scan:
+Two kernels, one memory story:
+
+* :func:`mcop_phase_kernel` — ONE MinCutPhase (Algorithm 3) per invocation.
+  The host keeps the Algorithm-2 loop and the Algorithm-1 merges in numpy
+  (see ``repro.kernels.ops.mcop_min_cut``), so the adjacency crosses
+  HBM→VMEM once *per phase*: |V|−1 transfers per solve.
+
+* :func:`mcop_stoer_wagner_kernel` — the FULL modified Stoer–Wagner in a
+  single kernel invocation, batched over graphs.  All |V|−1 phases, the
+  Algorithm-1 merges of (s, t), and the initial fold of unoffloadable
+  vertices into the anchor run inside the kernel body, so the adjacency is
+  loaded into VMEM exactly once per solve.  A grid dimension over the
+  batch lets one ``pallas_call`` partition B independent graphs — the
+  throughput shape for the paper's §3.1 *real-time online* requirement
+  when millions of users (or an environment sweep) need placements per
+  scheduler tick.
+
+Dense adjacency is the TPU-native layout (the paper's graphs are small —
+tens to a few thousand vertices — so a whole (n, n) matrix fits VMEM:
+n = 1024 f32 is 4 MB against the ~16 MB/core budget; the wrappers enforce
+the bound).  The phase hot loop is the Most-Tightly-Connected-Vertex scan:
 
     repeat |V|−1 times:
         Δ(v)  = conn(v) − [w_local(v) − w_cloud(v)]   over v ∉ A
         v*    = argmax Δ                               (VPU masked max)
         conn += adj[v*]                                (VPU row add)
 
-Dense adjacency is the TPU-native layout (the paper's graphs are small —
-tens to a few thousand vertices — so the whole (n, n) matrix fits VMEM:
-n = 1024 f32 is 4 MB against the ~16 MB/core budget; ops.py enforces the
-bound).  The entire phase runs as ONE kernel invocation — a
-``lax.fori_loop`` over absorptions inside the kernel body — so there is a
-single HBM→VMEM transfer of the adjacency per phase instead of one per
-absorption: the loop is bandwidth-bound on `conn += adj[v*]` row reads,
-which is exactly the term VMEM residency removes.
+The full kernel avoids dynamic row gathers and transposes entirely: rows
+are extracted with one-hot masked reductions, and row↔column vector moves
+use the identity-mask gadget ``Σ_j eye[i,j]·v[j]`` — both plain VPU work.
 
-Outputs: the phase's cut value (Eq. 10), s and t (the last two vertices),
-matching ``repro.core.mcop._min_cut_phase`` bit-for-bit on the paper's
-worked example (property-tested in tests/test_kernels.py).
+``interpret`` defaults to auto-detection (compiled on TPU, interpreter
+elsewhere) via ``repro.kernels.ops.default_interpret``; pass an explicit
+bool to override.
 
-Padded vertices are encoded ``alive = 0`` and never selected (their score
-is −∞); scalars travel as (1, 1) f32/i32 arrays to keep the kernel
-TPU-lowering-friendly (2-D everywhere, no 0-D iota).
+Padded/dead vertices are encoded ``alive = 0`` (phase kernel) or
+``pinned = 1`` with zero weights (full kernel) and never selected (their
+score is −∞); scalars travel as (1, 1) or (1, n) 2-D arrays to keep the
+kernels TPU-lowering-friendly (2-D everywhere, no 0-D iota).
+
+Backend selection cheat-sheet (see also ``repro.core.mcop``):
+
+* one graph, need the per-phase trace        → ``mcop_reference`` (numpy)
+* one graph inside a jitted loop             → ``mcop_jax``
+* many graphs / env sweep, XLA               → ``core.mcop.mcop_batch``
+* many graphs, adjacency resident in VMEM    → this file's full kernel
+  (``mcop_batch(..., backend="pallas")``) — wins on TPU where the
+  dominant cost is HBM row traffic, which single-load residency removes.
 """
 
 from __future__ import annotations
@@ -40,9 +65,30 @@ try:
 except Exception:  # pragma: no cover
     _VMEM = pl.MemorySpace.ANY  # type: ignore[attr-defined]
 
-__all__ = ["mcop_phase_kernel"]
+__all__ = ["mcop_phase_kernel", "mcop_stoer_wagner_kernel"]
 
-NEG_INF = -2.0**30
+# f32-representable sentinels matching the solver backends in core.mcop —
+# graphs priced in FLOPs/bytes can have cuts far above 2**30, so a small
+# sentinel would silently swallow every phase cut.
+NEG_INF = -1e30
+POS_INF = 1e30
+
+# VMEM bound: adjacency + vectors must fit on-core alongside double-buffers.
+_VMEM_BYTES = 12 * 2**20
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    # Deferred import: ops.py imports this module at load time.
+    from repro.kernels.ops import default_interpret
+
+    return default_interpret()
+
+
+# ======================================================================
+# Single-phase kernel (Algorithm 3) — host drives the phase loop.
+# ======================================================================
 
 
 def _phase_body(
@@ -98,12 +144,14 @@ def mcop_phase_kernel(
     src: int | jnp.ndarray,
     c_local_total: float | jnp.ndarray,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Run one MinCutPhase.  Returns (cut_value, s, t)."""
+    """Run one MinCutPhase.  Returns (cut_value, s, t).
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere.
+    """
     n = adj.shape[0]
-    # VMEM bound: adjacency + vectors must fit on-core.
-    assert n * n * 4 <= 12 * 2**20, f"graph too large for single-core VMEM: n={n}"
+    assert n * n * 4 <= _VMEM_BYTES, f"graph too large for single-core VMEM: n={n}"
     body = functools.partial(_phase_body, n=n)
     cut, s, t = pl.pallas_call(
         body,
@@ -125,7 +173,7 @@ def mcop_phase_kernel(
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
     )(
         adj.astype(jnp.float32),
         jnp.asarray(gains, jnp.float32)[None, :],
@@ -134,3 +182,208 @@ def mcop_phase_kernel(
         jnp.asarray(c_local_total, jnp.float32).reshape(1, 1),
     )
     return cut[0, 0], s[0, 0], t[0, 0]
+
+
+# ======================================================================
+# Full solver kernel — all phases + merges, one VMEM load, batch grid.
+# ======================================================================
+
+
+def _sw_body(
+    adj_ref,   # (1, n, n) f32 — one graph of the batch
+    wl_ref,    # (1, n) f32
+    wc_ref,    # (1, n) f32
+    pin_ref,   # (1, n) f32    1.0 = unoffloadable (pinned to local tier)
+    cut_ref,   # (1, 1) f32    out: min over phases of Eq. 10
+    mask_ref,  # (1, n) f32    out: 1.0 = execute locally
+    *,
+    n: int,
+):
+    f32 = jnp.float32
+    adj = adj_ref[0]
+    wl = wl_ref[...]
+    wc = wc_ref[...]
+    pin = pin_ref[...] > 0.5
+
+    row_i = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    col_i = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    col1 = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    eye = (row_i == col_i).astype(f32)
+
+    def as_col(v):
+        # (1, n) → (n, 1) without transpose/reshape: diagonal-mask reduce.
+        return jnp.sum(eye * v, axis=1, keepdims=True)
+
+    def as_row(c):
+        # (n, 1) → (1, n), same gadget along the other axis.
+        return jnp.sum(eye * c, axis=0, keepdims=True)
+
+    def row_of(mat, v_idx):
+        return jnp.sum(
+            mat * (row_i == v_idx).astype(f32), axis=0, keepdims=True
+        )  # (1, n)
+
+    ctot = jnp.sum(wl)  # C_local — invariant under merging
+
+    # ---- fold all pinned vertices into the anchor (Algorithm 2 step 1) --
+    any_p = jnp.any(pin)
+    src0 = jnp.where(
+        any_p, jnp.argmax(pin.astype(f32), axis=1)[0], 0
+    ).astype(jnp.int32)
+    others = pin & (col1 != src0)                               # (1, n)
+    oth_f = others.astype(f32)
+    # Σ of folded rows, as a column (symmetry: row-fold == col-fold).
+    fold_col = jnp.sum(adj * oth_f, axis=1, keepdims=True)      # (n, 1)
+    fold_row = as_row(fold_col)                                 # (1, n)
+    keep_row = 1.0 - oth_f
+    keep_col = as_col(keep_row)
+    adj = adj * keep_row * keep_col
+    s_rows = row_i == src0
+    s_cols = col_i == src0
+    adj = adj + s_rows.astype(f32) * (fold_row * keep_row)
+    adj = adj + s_cols.astype(f32) * (fold_col * keep_col)
+    adj = jnp.where(s_rows & s_cols, 0.0, adj)
+
+    srcm = (col1 == src0).astype(f32)                           # (1, n)
+    pin_f = pin.astype(f32)
+    pin_src = jnp.sum(pin_f * srcm)
+    wl_src = jnp.sum(wl * pin_f) + jnp.sum(wl * srcm) * (1.0 - pin_src)
+    wc_src = jnp.sum(wc * pin_f) + jnp.sum(wc * srcm) * (1.0 - pin_src)
+    wl = jnp.where(others, 0.0, wl)
+    wl = jnp.where(srcm > 0.5, wl_src, wl)
+    wc = jnp.where(others, 0.0, wc)
+    wc = jnp.where(srcm > 0.5, wc_src, wc)
+    alive = ~others                                             # (1, n)
+    members = jnp.maximum(eye, s_rows.astype(f32) * pin_f)      # (n, n)
+
+    # ---- Algorithm 2: |V|−1 phases, each followed by an Alg.-1 merge ----
+    def phase(_, carry):
+        adj, wl, wc, alive, members, src, best_cut, best_cloud = carry
+        gains = wl - wc
+        n_alive = jnp.sum(alive.astype(jnp.int32))
+        valid = n_alive >= 2
+
+        in_a0 = alive & (col1 == src)
+        conn0 = row_of(adj, src)
+
+        def absorb(i, inner):
+            in_a, conn, s_reg, t_reg = inner
+            cand = alive & ~in_a
+            scores = jnp.where(cand, conn - gains, NEG_INF)
+            v = jnp.argmax(scores, axis=1)[0].astype(jnp.int32)
+            do = (i + 1) < n_alive
+            in_a = jnp.where(do, in_a | (col1 == v), in_a)
+            conn = jnp.where(do, conn + row_of(adj, v), conn)
+            s_reg = jnp.where(do, t_reg, s_reg)
+            t_reg = jnp.where(do, v, t_reg)
+            return in_a, conn, s_reg, t_reg
+
+        _, _, s_reg, t_reg = jax.lax.fori_loop(
+            0, n - 1, absorb, (in_a0, conn0, src, src)
+        )
+
+        # Eq. 10 cut-of-the-phase.
+        tm_f = (col1 == t_reg).astype(f32)
+        t_row = row_of(adj, t_reg)                              # (1, n)
+        comm = jnp.sum(t_row * alive.astype(f32))
+        gains_t = jnp.sum(gains * tm_f)
+        cut = jnp.where(valid, ctot - gains_t + comm, POS_INF)
+
+        t_rows = row_i == t_reg
+        cloud_t = jnp.sum(members * t_rows.astype(f32), axis=0, keepdims=True)
+        improved = valid & (cut < best_cut)
+        best_cut = jnp.where(improved, cut, best_cut)
+        best_cloud = jnp.where(improved, cloud_t, best_cloud)
+
+        # Algorithm 1: merge t into s (masked, symmetric).
+        do_merge = valid & (s_reg != t_reg)
+        s_rows_m = row_i == s_reg
+        s_cols_m = col_i == s_reg
+        t_cols = col_i == t_reg
+        adj_m = adj + s_rows_m.astype(f32) * t_row
+        adj_m = adj_m + s_cols_m.astype(f32) * as_col(t_row)
+        adj_m = jnp.where(s_rows_m & s_cols_m, 0.0, adj_m)
+        adj_m = jnp.where(t_rows | t_cols, 0.0, adj_m)
+        sm_f = (col1 == s_reg).astype(f32)
+        wl_m = jnp.where(tm_f > 0.5, 0.0, wl + sm_f * jnp.sum(wl * tm_f))
+        wc_m = jnp.where(tm_f > 0.5, 0.0, wc + sm_f * jnp.sum(wc * tm_f))
+        members_m = jnp.minimum(members + s_rows_m.astype(f32) * cloud_t, 1.0)
+        members_m = jnp.where(t_rows, 0.0, members_m)
+        alive_m = alive & ~(tm_f > 0.5)
+
+        adj = jnp.where(do_merge, adj_m, adj)
+        wl = jnp.where(do_merge, wl_m, wl)
+        wc = jnp.where(do_merge, wc_m, wc)
+        members = jnp.where(do_merge, members_m, members)
+        alive = jnp.where(do_merge, alive_m, alive)
+        src = jnp.where(do_merge & (t_reg == src), s_reg, src)
+        return adj, wl, wc, alive, members, src, best_cut, best_cloud
+
+    carry0 = (
+        adj, wl, wc, alive, members, src0,
+        jnp.asarray(POS_INF, f32), jnp.zeros((1, n), f32),
+    )
+    out = jax.lax.fori_loop(0, n - 1, phase, carry0)
+    best_cut, best_cloud = out[6], out[7]
+    cut_ref[0, 0] = best_cut
+    mask_ref[...] = 1.0 - best_cloud
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _sw_call(adj, wl, wc, pin, *, interpret: bool):
+    b, n, _ = adj.shape
+    body = functools.partial(_sw_body, n=n)
+    cut, mask = pl.pallas_call(
+        body,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(adj, wl, wc, pin)
+    return cut[:, 0], mask > 0.5
+
+
+def mcop_stoer_wagner_kernel(
+    adj: jnp.ndarray,       # (B, n, n) f32 — a batch of WCG adjacencies
+    w_local: jnp.ndarray,   # (B, n)
+    w_cloud: jnp.ndarray,   # (B, n)
+    pinned: jnp.ndarray,    # (B, n) bool/f32 — True = unoffloadable
+    *,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Solve a batch of MCOP instances entirely on-device.
+
+    One grid step per graph; within a step the adjacency lives in VMEM for
+    the whole |V|−1-phase run (single HBM load per solve).  Returns
+    ``(min_cuts (B,), local_masks (B, n) bool)`` — semantics match
+    :func:`repro.core.mcop.mcop_reference` (same heuristic, same
+    tie-breaking, f32 arithmetic).  Dead/padded vertices must be encoded
+    as pinned with zero weights and zero incident edges.
+    """
+    adj = jnp.asarray(adj, jnp.float32)
+    assert adj.ndim == 3, f"expected (B, n, n) batch, got {adj.shape}"
+    n = adj.shape[-1]
+    # The body keeps ~5 n²-sized arrays live (adj, eye, members/labels,
+    # two iota matrices) besides the input block — budget all of them.
+    assert 5 * n * n * 4 <= _VMEM_BYTES, (
+        f"graph too large for single-core VMEM with kernel working set: n={n}"
+    )
+    return _sw_call(
+        adj,
+        jnp.asarray(w_local, jnp.float32).reshape(adj.shape[0], n),
+        jnp.asarray(w_cloud, jnp.float32).reshape(adj.shape[0], n),
+        jnp.asarray(pinned, jnp.float32).reshape(adj.shape[0], n),
+        interpret=_resolve_interpret(interpret),
+    )

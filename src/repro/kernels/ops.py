@@ -24,11 +24,28 @@ from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.mamba_scan import mamba_chunk_scan_kernel
 from repro.kernels.mcop_phase import mcop_phase_kernel
 
-__all__ = ["flash_attention", "mamba_chunk_scan", "mcop_min_cut", "on_tpu"]
+__all__ = [
+    "flash_attention",
+    "mamba_chunk_scan",
+    "mcop_min_cut",
+    "on_tpu",
+    "default_interpret",
+]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """Pallas interpret-mode default, detected once from the JAX backend.
+
+    Compiled kernels on TPU; the (slow but portable) interpreter everywhere
+    else — CPU CI containers, GPU hosts.  Kernel wrappers take
+    ``interpret=None`` to mean "use this".
+    """
+    return not on_tpu()
 
 
 @functools.partial(
@@ -97,7 +114,7 @@ def mcop_min_cut(
     w_cloud: np.ndarray,
     offloadable: np.ndarray,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[float, np.ndarray]:
     """MCOP with the per-phase hot loop on the accelerator.
 

@@ -2,7 +2,8 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # hypothesis or skip-shim (see _hyp.py)
 
 from repro.core import (
     AppProfile,
@@ -48,6 +49,21 @@ def test_energy_model_eq6_uses_paper_powers():
     g = EnergyModel().build(prof, env)
     assert np.allclose(g.w_local, PAPER_POWERS["p_compute"] * prof.t_local)
     assert np.allclose(g.w_cloud, PAPER_POWERS["p_idle"] * prof.t_local / 2.0)
+
+
+@pytest.mark.parametrize("omega", [0.0, 0.25, 0.7, 1.0])
+def test_weighted_model_interpolates_smoke(omega):
+    """Fixed-ω numpy fallback of the hypothesis property below."""
+    prof = _profile()
+    env = Environment.symmetric(bandwidth=1.5, speedup=3.0)
+    gw = WeightedModel(omega).build(prof, env)
+    gt = ResponseTimeModel().build(prof, env)
+    ge = EnergyModel().build(prof, env)
+    expect = (
+        omega * gt.w_local / gt.w_local.sum()
+        + (1 - omega) * ge.w_local / ge.w_local.sum()
+    )
+    assert np.allclose(gw.w_local, expect)
 
 
 @given(st.floats(0.0, 1.0))

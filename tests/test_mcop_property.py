@@ -23,7 +23,8 @@ The optimality-gap distribution itself is quantified in
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # hypothesis or skip-shim (see _hyp.py)
 
 from repro.core import (
     WCG,
@@ -60,6 +61,52 @@ def wcg_strategy(draw, max_n: int = 10):
         n_unoffloadable=n_pin,
         rng=np.random.default_rng(seed),
         integer_weights=integer,
+    )
+
+
+# ----------------------------------------------------------------------
+# numpy-based smoke fallbacks — fixed-seed versions of the key properties
+# that run in tier-1 even when hypothesis is unavailable.
+# ----------------------------------------------------------------------
+
+
+def _smoke_wcg(seed: int) -> WCG:
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 11))
+    return random_wcg(
+        n,
+        edge_prob=float(rng.choice([0.1, 0.3, 0.6, 0.9])),
+        speedup=float(rng.choice([1.2, 2.0, 3.0, 10.0])),
+        n_unoffloadable=int(rng.integers(1, max(2, n // 3 + 1))),
+        rng=rng,
+    )
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_mcop_bounds_and_self_consistency_smoke(seed):
+    g = _smoke_wcg(seed)
+    res = mcop_reference(g)
+    opt = brute_force(g)
+    assert res.min_cut >= opt.cost - 1e-9
+    assert res.min_cut <= full_offloading(g).cost + 1e-9
+    assert g.total_cost(res.local_mask) == pytest.approx(res.min_cut, rel=1e-9)
+    g.validate_placement(res.local_mask)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_jax_backend_matches_reference_smoke(seed):
+    g = _smoke_wcg(100 + seed)
+    ref = mcop_reference(g)
+    jx = mcop_jax(g)
+    assert jx.min_cut == pytest.approx(ref.min_cut, rel=1e-5, abs=1e-4)
+    assert g.total_cost(jx.local_mask) == pytest.approx(ref.min_cut, rel=1e-5, abs=1e-4)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_maxflow_oracle_agrees_with_brute_force_smoke(seed):
+    g = _smoke_wcg(200 + seed)
+    assert maxflow_optimal(g).cost == pytest.approx(
+        brute_force(g).cost, rel=1e-9, abs=1e-9
     )
 
 
@@ -104,6 +151,7 @@ def test_chain_dp_on_linear_graphs(n, seed):
     assert chain_dp(g).cost == pytest.approx(brute_force(g).cost, rel=1e-9)
 
 
+@pytest.mark.slow
 def test_mcop_exact_rate_on_adversarial_distribution():
     """Statistical reproduction check: ≥60% exact, mean gap <8% on the
     hardest random distribution (measured ≈70% / 4.9%)."""
