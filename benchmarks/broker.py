@@ -1,0 +1,74 @@
+"""Offload broker tick throughput: the serving-tier number.
+
+Drives the deterministic multi-user workload
+(`repro.service.workload.run_workload`) through an `OffloadBroker` and
+reports per-request latency along with the ratios that make the broker
+worth running: coalesce ratio (requests that did not need their own
+solve), cache hit rate, and solver dispatches per tick.  A second pass
+replays the identical traces against a broker warm-started from the
+first broker's cache snapshot — the serving-restart path, which must
+reach zero dispatches.
+
+Rows are appended to ``BENCH_broker.json`` by ``benchmarks/run.py`` (a
+bounded trajectory, like ``BENCH_mcop.json`` for the solver backends)
+and smoke-checked after each run.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import AppProfile, ResponseTimeModel, face_recognition_graph
+from repro.service import OffloadBroker, run_workload, user_traces
+
+
+def _drive(broker, traces, n_users: int, steps: int) -> float:
+    t0 = time.perf_counter()
+    run_workload(
+        broker, "app", n_users=n_users, steps=steps, traces=traces
+    )
+    return time.perf_counter() - t0
+
+
+def run() -> list[dict]:
+    rows: list[dict] = []
+    profile = AppProfile.from_wcg_times(
+        face_recognition_graph(speedup=1.0, bandwidth_mbps=1.0)
+    )
+    steps = 10
+    for n_users in (8, 32):
+        traces = user_traces(n_users, steps, seed=7)
+
+        cold = OffloadBroker(backend="jax")
+        cold.register("app", profile, ResponseTimeModel())
+        _drive(cold, traces, n_users, steps)  # compile the bucket program
+        snapshot = cold.snapshot("app")
+
+        cold2 = OffloadBroker(backend="jax")
+        cold2.register("app", profile, ResponseTimeModel())
+        t_cold = _drive(cold2, traces, n_users, steps)
+        tel = cold2.telemetry
+        rows.append(
+            {
+                "name": f"broker/cold_u{n_users}x{steps}",
+                "us_per_call": t_cold / max(tel.requests, 1) * 1e6,
+                "derived": f"{tel.dispatches} dispatches/{tel.ticks} ticks;"
+                f" coalesce={tel.coalesce_ratio:.2f} hit={tel.hit_rate:.2f}"
+                f" maxq={tel.max_queue_depth}",
+            }
+        )
+
+        warm = OffloadBroker(backend="jax")
+        warm.register("app", profile, ResponseTimeModel(), warm_start=snapshot)
+        t_warm = _drive(warm, traces, n_users, steps)
+        telw = warm.telemetry
+        rows.append(
+            {
+                "name": f"broker/warm_u{n_users}x{steps}",
+                "us_per_call": t_warm / max(telw.requests, 1) * 1e6,
+                "derived": f"{telw.dispatches} dispatches (restart replay);"
+                f" hit={telw.hit_rate:.2f}; {t_cold / max(t_warm, 1e-12):.1f}x"
+                " vs cold",
+            }
+        )
+    return rows

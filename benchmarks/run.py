@@ -8,11 +8,13 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
     gains           → Figs. 17–19 (schemes vs B and F; 3 cost models)
     optimality_gap  → beyond-paper: Theorem 1 gap quantification
     mcop_backends   → §3.1 real-time requirement (ref vs jit vs batched vs Pallas)
+    broker          → serving tier: multi-user tick throughput, warm restarts
     roofline        → §Roofline table from the dry-run artifact
 
 The mcop_backends rows are additionally appended to ``BENCH_mcop.json``
-(a bounded trajectory of runs), so backend/batching speedups can be
-tracked across commits.
+and the broker rows to ``BENCH_broker.json`` (bounded trajectories of
+runs), so backend/batching/serving speedups can be tracked across
+commits; the broker artifact is smoke-checked after every append.
 """
 
 from __future__ import annotations
@@ -24,6 +26,7 @@ import sys
 import time
 
 from benchmarks import (
+    broker,
     complexity,
     compression_ablation,
     gains,
@@ -37,24 +40,38 @@ MODULES = {
     "gains": gains,
     "optimality_gap": optimality_gap,
     "mcop_backends": mcop_backends,
+    "broker": broker,
     "compression_ablation": compression_ablation,
     "roofline": roofline,
 }
 
 
-# anchored at the repo root so the trajectory accumulates in one place
+# anchored at the repo root so the trajectories accumulate in one place
 # regardless of the invoking cwd
-_TRAJECTORY_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_mcop.json"
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_mcop.json"
+_BROKER_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_broker.json"
 _TRAJECTORY_KEEP = 50  # bounded history of runs
 
 
-def _append_trajectory(rows: list[dict], path: pathlib.Path = _TRAJECTORY_PATH) -> None:
-    """Append this run's mcop_backends rows to the trajectory artifact."""
-    doc = {"benchmark": "mcop_backends", "runs": []}
+def _append_trajectory(
+    rows: list[dict],
+    path: pathlib.Path = _TRAJECTORY_PATH,
+    benchmark: str = "mcop_backends",
+) -> None:
+    """Append one run's rows to a bounded trajectory artifact."""
+    doc = {"benchmark": benchmark, "runs": []}
     if path.exists():
         try:
             loaded = json.loads(path.read_text())
-            if isinstance(loaded.get("runs"), list):
+            # adopt only a well-formed doc for the SAME benchmark; a
+            # foreign tag or non-dict payload starts a fresh trajectory
+            # (isinstance guard also keeps JSON arrays on the corrupt path)
+            if (
+                isinstance(loaded, dict)
+                and loaded.get("benchmark") == benchmark
+                and isinstance(loaded.get("runs"), list)
+            ):
                 doc = loaded
         except (json.JSONDecodeError, OSError):
             pass  # corrupt artifact: start a fresh trajectory
@@ -75,6 +92,28 @@ def _append_trajectory(rows: list[dict], path: pathlib.Path = _TRAJECTORY_PATH) 
     path.write_text(json.dumps(doc, indent=2) + "\n")
 
 
+def _smoke_check_trajectory(path: pathlib.Path, benchmark: str) -> None:
+    """Fail loudly if the just-written artifact would not load warm.
+
+    The broker trajectory is what dashboards (and the next session's
+    diff) read; a malformed write must surface as a benchmark failure,
+    not as a silently cold artifact later.
+    """
+    doc = json.loads(path.read_text())
+    if doc.get("benchmark") != benchmark:
+        raise RuntimeError(f"{path.name}: wrong benchmark tag {doc.get('benchmark')!r}")
+    runs = doc.get("runs")
+    if not isinstance(runs, list) or not runs:
+        raise RuntimeError(f"{path.name}: no runs recorded")
+    last = runs[-1]
+    if not isinstance(last.get("rows"), list) or not last["rows"]:
+        raise RuntimeError(f"{path.name}: last run has no rows")
+    for row in last["rows"]:
+        if not {"name", "us_per_call", "derived"} <= set(row):
+            raise RuntimeError(f"{path.name}: malformed row {row!r}")
+        float(row["us_per_call"])  # numeric or raise
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", help="comma-separated subset of benchmarks")
@@ -91,6 +130,10 @@ def main(argv=None) -> int:
                 print(f"{row['name']},{row['us_per_call']:.2f},{derived}", flush=True)
             if name == "mcop_backends":
                 _append_trajectory(rows)
+            elif name == "broker":
+                _append_trajectory(rows, _BROKER_TRAJECTORY_PATH, "broker")
+                _smoke_check_trajectory(_BROKER_TRAJECTORY_PATH, "broker")
+                print("broker/smoke,0.00,BENCH_broker.json ok", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}/ERROR,0.00,{e!r}", flush=True)

@@ -6,15 +6,20 @@ The AdaptiveController re-runs MCOP only when drift exceeds the threshold
 and reports the paper's three schemes at every instant.  The whole walk
 goes through the *batched* path — one ``mcop_batch`` dispatch for all
 repartition points — and a second user walking the same streets shows the
-quantized placement cache turning their repartitions into hits.  Also
-shows the cluster-scale analogue: chips failing out of a tier triggering
-the same repartition path (ElasticMeshManager) and a straggler being
-detected and drained by the HeartbeatMonitor.
+quantized placement cache turning their repartitions into hits.  Then the
+serving tier: an OffloadBroker coalesces a whole fleet of users into one
+dispatch per bucket per tick, snapshots its placement cache, and a
+restarted broker replays the identical day with ZERO solver dispatches.
+Also shows the cluster-scale analogue: chips failing out of a tier
+triggering the same repartition path (ElasticMeshManager, sync and
+broker-queued) and a straggler being detected and drained by the
+HeartbeatMonitor.
 
     PYTHONPATH=src python examples/adaptive_offload.py
 """
 
 import dataclasses
+import tempfile
 
 import numpy as np
 
@@ -30,6 +35,7 @@ from repro.core.placement import TPUV5E_TIER
 from repro.configs import ARCHITECTURES, SHAPES
 from repro.profilers.program import stage_specs
 from repro.runtime import ElasticMeshManager, HeartbeatMonitor
+from repro.service import OffloadBroker, run_workload, user_traces
 
 
 def main():
@@ -73,6 +79,30 @@ def main():
           f"from cache; totals hits={st.hits} misses={st.misses} "
           f"hit_rate={st.hit_rate:.0%}\n")
 
+    # ---- the serving tier: many users, one broker ---------------------
+    print("=== Offload broker: a fleet of users, one dispatch per bucket =")
+    n_users, steps = 12, 10
+    broker = OffloadBroker(backend="jax")
+    broker.register("face", prof, ResponseTimeModel())
+    traces = user_traces(n_users, steps, seed=42)
+    run_workload(broker, "face", n_users=n_users, steps=steps, traces=traces)
+    tel = broker.telemetry
+    print(f"{n_users} users x {steps} ticks: {tel.requests} solve requests "
+          f"→ {tel.solved} solves in {tel.dispatches} dispatches "
+          f"(coalesce={tel.coalesce_ratio:.0%}, cache hit={tel.hit_rate:.0%}, "
+          f"max queue={tel.max_queue_depth})")
+
+    # serving restart: snapshot the cache, warm-start a new broker, replay
+    with tempfile.TemporaryDirectory() as tmp:
+        snap_path = f"{tmp}/face_cache.json"
+        broker.save_snapshot("face", snap_path)
+        broker2 = OffloadBroker(backend="jax")
+        broker2.register("face", prof, ResponseTimeModel(), warm_start=snap_path)
+        run_workload(broker2, "face", n_users=n_users, steps=steps, traces=traces)
+    t2 = broker2.telemetry
+    print(f"→ restart + warm cache, same day replayed: {t2.dispatches} solver "
+          f"dispatches, hit rate {t2.hit_rate:.0%}\n")
+
     # ---- the cluster-scale analogue -----------------------------------
     print("=== Elastic fleet: chip loss re-prices the speedup factor ====")
     cfg = ARCHITECTURES["qwen2-7b"]
@@ -89,6 +119,15 @@ def main():
           f"{int(ev.plan.stage_tier.sum())}/{len(stages)}  ({ev.reason})")
     ev = mgr.resize(step=300, remote_chips=256, reason="pod-1 restored+grown")
     print(f"t=300 F={mgr.speedup:.2f} offloaded_stages="
+          f"{int(ev.plan.stage_tier.sum())}/{len(stages)}  ({ev.reason})")
+    # elastic events are broker clients too: the solve queues with user
+    # requests and lands at the next tick
+    broker.register("fleet")
+    pending = mgr.submit_resize(broker, "fleet", step=450, remote_chips=64,
+                                reason="pod-1 partial brownout (queued)")
+    broker.tick()
+    ev = pending.resolve()
+    print(f"t=450 F={mgr.speedup:.2f} offloaded_stages="
           f"{int(ev.plan.stage_tier.sum())}/{len(stages)}  ({ev.reason})\n")
 
     # ---- straggler mitigation -----------------------------------------

@@ -18,7 +18,12 @@ from repro.core.mcop import (
     mcop_jax,
     mcop_reference,
 )
-from repro.core.placement_cache import CacheStats, EnvQuantizer, PlacementCache
+from repro.core.placement_cache import (
+    CacheStats,
+    EnvQuantizer,
+    PlacementCache,
+    profile_fingerprint,
+)
 from repro.core.baselines import (
     PartitionResult,
     branch_and_bound,
@@ -57,6 +62,7 @@ __all__ = [
     "CacheStats",
     "EnvQuantizer",
     "PlacementCache",
+    "profile_fingerprint",
     "PartitionResult",
     "branch_and_bound",
     "brute_force",

@@ -21,6 +21,14 @@ front, solve all repartition points in ONE ``mcop_batch`` dispatch, and
 serve repeats from a :class:`~repro.core.placement_cache.PlacementCache`
 keyed on quantized environment bins.  With ``cache=None`` the sweep is
 bit-identical to calling :meth:`observe` per environment.
+
+Serving scale: where :meth:`AdaptiveController.sweep` batches one
+controller across *time*, the :class:`repro.service.broker.OffloadBroker`
+batches many controllers across *users* — per-user
+:class:`repro.service.session.BrokerSession`s drive this controller's
+:meth:`~AdaptiveController.begin_step` / :meth:`~AdaptiveController.commit_step`
+split and route the solves through the broker's coalesced per-tick
+``mcop_batch`` dispatches and shared persistent cache.
 """
 
 from __future__ import annotations
@@ -118,6 +126,9 @@ class AdaptiveController:
         self._steps_since = 10**9
         self._step = 0
         self._current: MCOPResult | None = None
+        # decision-level flag: a partition exists or has been *scheduled*
+        # (begin_step may run ticks before the deferred solve commits)
+        self._has_partition = False
         self.history: list[AdaptationEvent] = []
 
     # ------------------------------------------------------------------
@@ -126,18 +137,24 @@ class AdaptiveController:
         return baselines.clamp_no_offloading(g, candidate)
 
     def _reprice(self, g: WCG, mask: np.ndarray) -> MCOPResult:
-        """A cached mask is re-priced at the exact current WCG — costs stay
-        honest even though the placement came from a same-bin neighbor."""
-        mask = np.asarray(mask, dtype=bool)
-        return MCOPResult(min_cut=g.total_cost(mask), local_mask=mask, phases=[])
+        """A cached mask is re-priced at the exact current WCG and clamped
+        (shared with the broker via :func:`baselines.reprice_clamped`) —
+        costs stay honest even though the placement came from a same-bin
+        neighbor."""
+        return baselines.reprice_clamped(g, mask)
 
     def _repartition_due(self, env: Environment) -> bool:
-        return self._current is None or (
+        return not self._has_partition or (
             self.drift.exceeded(env) and self._steps_since >= self.min_interval
         )
 
     def _emit(
-        self, g: WCG, env: Environment, repartitioned: bool, cache_hit: bool
+        self,
+        g: WCG,
+        env: Environment,
+        repartitioned: bool,
+        cache_hit: bool,
+        step: int | None = None,
     ) -> AdaptationEvent:
         assert self._current is not None
         # Cost of the *current* placement under the *new* environment: if we
@@ -146,7 +163,7 @@ class AdaptiveController:
         no_off = baselines.no_offloading(g).cost
         full = baselines.full_offloading(g).cost
         event = AdaptationEvent(
-            step=self._step,
+            step=self._step if step is None else step,
             env=env,
             result=self._current,
             partial_cost=partial,
@@ -160,28 +177,83 @@ class AdaptiveController:
         return event
 
     # ------------------------------------------------------------------
-    def observe(self, env: Environment) -> AdaptationEvent:
-        """Feed one environment measurement; repartition if warranted."""
+    def begin_step(self, env: Environment) -> tuple[WCG, bool]:
+        """Advance the loop clock and take the repartition decision.
+
+        The drift/cooldown decision never depends on solver output, so
+        its state effects (anchor move, cooldown reset) apply
+        immediately.  That split is what lets an
+        :class:`~repro.service.broker.OffloadBroker` defer the solve to
+        a later coalesced tick: callers pair this with
+        :meth:`commit_step` once the placement is available.  Returns
+        the WCG priced at ``env`` and whether a repartition is due.
+        """
         self._step += 1
         self._steps_since += 1
         g = self.cost_model.build(self.profile, env)
-        repartition = self._repartition_due(env)
-        cache_hit = False
-        if repartition:
-            candidate = None
-            if self.cache is not None:
-                mask = self.cache.get(env, expected_n=g.n)
-                if mask is not None:
-                    candidate = self._clamp(g, self._reprice(g, mask))
-                    cache_hit = True
-            if candidate is None:
-                candidate = self._clamp(g, mcop(g, backend=self.backend))
-                if self.cache is not None:
-                    self.cache.put(env, candidate.local_mask)
-            self._current = candidate
+        due = self._repartition_due(env)
+        if due:
             self.drift.anchor(env)
             self._steps_since = 0
-        return self._emit(g, env, repartition, cache_hit)
+            self._has_partition = True
+        return g, due
+
+    def commit_step(
+        self,
+        g: WCG,
+        env: Environment,
+        candidate: MCOPResult | None,
+        *,
+        repartitioned: bool,
+        cache_hit: bool = False,
+        step: int | None = None,
+    ) -> AdaptationEvent:
+        """Install the resolved placement (if any) and emit the event.
+
+        ``candidate`` must already be clamped (paper §4.3) and priced for
+        ``g`` — :meth:`_resolve` and the broker both guarantee this.
+        Deferred callers (broker sessions committing a backlog after a
+        tick) pass the ``step`` number captured at :meth:`begin_step`
+        time so events carry the observation's own step, not the latest
+        clock value.
+        """
+        if repartitioned:
+            assert candidate is not None
+            self._current = candidate
+        return self._emit(g, env, repartitioned, cache_hit, step=step)
+
+    def _resolve(self, g: WCG, env: Environment) -> tuple[MCOPResult, bool]:
+        """Cache-or-solve for one repartition point (serial path)."""
+        if self.cache is not None:
+            mask = self.cache.get(env, expected_n=g.n)
+            if mask is not None:
+                return self._reprice(g, mask), True
+        candidate = self._clamp(g, mcop(g, backend=self.backend))
+        if self.cache is not None:
+            self.cache.put(env, candidate.local_mask)
+        return candidate, False
+
+    def observe(self, env: Environment) -> AdaptationEvent:
+        """Feed one environment measurement; repartition if warranted."""
+        anchor = self.drift._anchor
+        prev_since = self._steps_since
+        had_partition = self._has_partition
+        g, due = self.begin_step(env)
+        if not due:
+            return self.commit_step(g, env, None, repartitioned=False)
+        try:
+            candidate, cache_hit = self._resolve(g, env)
+        except BaseException:
+            # a solver failure must not corrupt the loop: undo the decision
+            # effects so the next observe() retries instead of serving a
+            # placement that never arrived
+            self.drift._anchor = anchor
+            self._steps_since = prev_since + 1
+            self._has_partition = had_partition
+            raise
+        return self.commit_step(
+            g, env, candidate, repartitioned=True, cache_hit=cache_hit
+        )
 
     # ------------------------------------------------------------------
     def sweep(self, envs: Sequence[Environment]) -> list[AdaptationEvent]:
@@ -205,7 +277,7 @@ class AdaptiveController:
         # ---- pass 1: decide repartition steps without solving ----------
         steps_since = self._steps_since
         anchor = self.drift._anchor
-        have_current = self._current is not None
+        have_current = self._has_partition
         decisions: list[bool] = []
         for env in envs:
             steps_since += 1
@@ -273,18 +345,19 @@ class AdaptiveController:
             if decisions[i]:
                 kind, payload = source[i]
                 if kind == "mask":
-                    self._current = self._clamp(g, self._reprice(g, payload))
+                    self._current = self._reprice(g, payload)
                     cache_hit = True
                 elif kind == "solve":
                     self._current = clamped_solved[payload]
                 else:  # "reuse": the serial loop would have hit the first
                     # same-bin step's put() — reprice its mask here
-                    self._current = self._clamp(
-                        g, self._reprice(g, clamped_solved[payload].local_mask)
+                    self._current = self._reprice(
+                        g, clamped_solved[payload].local_mask
                     )
                     cache_hit = True
                 self.drift.anchor(env)
                 self._steps_since = 0
+                self._has_partition = True
             events.append(self._emit(g, env, decisions[i], cache_hit))
         return events
 

@@ -33,6 +33,7 @@ __all__ = [
     "no_offloading",
     "full_offloading",
     "clamp_no_offloading",
+    "reprice_clamped",
     "brute_force",
     "branch_and_bound",
     "maxflow_optimal",
@@ -83,6 +84,24 @@ def clamp_no_offloading(g: WCG, result):
             phases=result.phases,
         )
     return result
+
+
+def reprice_clamped(g: WCG, local_mask):
+    """Price a *reused* placement mask under the exact current WCG, then
+    apply the §4.3 beneficial-only clamp.
+
+    This is the honesty contract for every cached/coalesced placement:
+    the mask may come from a same-bin neighbour environment, but the
+    reported cost is always ``g.total_cost(mask)`` at today's prices.
+    Shared by the adaptive controller (cache hits, in-sweep reuse) and
+    the offload broker (hits and coalesced followers), so the serial and
+    served paths can never disagree.
+    """
+    from repro.core.mcop import MCOPResult  # deferred: avoid import cycle
+
+    mask = np.asarray(local_mask, dtype=bool)
+    candidate = MCOPResult(min_cut=g.total_cost(mask), local_mask=mask, phases=[])
+    return clamp_no_offloading(g, candidate)
 
 
 # ----------------------------------------------------------------------

@@ -126,6 +126,14 @@ class CostModel:
 
     name = "abstract"
 
+    @property
+    def fingerprint(self) -> str:
+        """Identity of the *objective* for cache-persistence guards: a
+        placement cached under one cost model must not warm-start a
+        tenant optimizing another.  Parametric models must fold their
+        parameters in (see :class:`WeightedModel`)."""
+        return self.name
+
     def build(self, profile: AppProfile, env: Environment) -> WCG:
         raise NotImplementedError
 
@@ -189,6 +197,10 @@ class WeightedModel(CostModel):
         self.omega = omega
         self._time = ResponseTimeModel()
         self._energy = EnergyModel()
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.name}:{self.omega!r}"
 
     def build(self, profile: AppProfile, env: Environment) -> WCG:
         gt = self._time.build(profile, env)

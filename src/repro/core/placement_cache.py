@@ -22,13 +22,23 @@ bounded with LRU eviction so a long-lived server can't grow without
 limit.  One cache instance should serve one (profile, cost-model)
 pair — share it across controllers only when they partition the same
 application (that is the multi-user win: N users, one profile, a handful
-of environment bins).
+of environment bins).  At serving scale that sharing is done by the
+:class:`repro.service.broker.OffloadBroker`, which owns one cache per
+tenant and keeps it warm across process restarts via
+:meth:`PlacementCache.snapshot` / :meth:`PlacementCache.load` — a JSON
+document guarded by a schema version, the quantizer step, and a
+:func:`profile_fingerprint` of the application profile, so a stale or
+foreign snapshot degrades to a cold cache instead of serving wrong
+placements.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import math
+import pathlib
 from collections import OrderedDict
 from typing import Tuple
 
@@ -36,7 +46,41 @@ import numpy as np
 
 from repro.core.cost_models import Environment
 
-__all__ = ["EnvQuantizer", "PlacementCache", "CacheStats"]
+__all__ = [
+    "EnvQuantizer",
+    "PlacementCache",
+    "CacheStats",
+    "profile_fingerprint",
+    "SNAPSHOT_VERSION",
+]
+
+# Bump when the snapshot schema changes; load() ignores unknown versions.
+SNAPSHOT_VERSION = 1
+
+
+def profile_fingerprint(obj) -> str:
+    """Stable content hash of an application profile (or WCG).
+
+    Identifies *what was partitioned* so a persisted cache is only warm
+    for the same application: masks are meaningless across profiles even
+    when the vertex counts happen to match.  Accepts an
+    :class:`~repro.core.cost_models.AppProfile` (``t_local``/``data_in``/
+    ``data_out``/``offloadable``) or a :class:`~repro.core.graph.WCG`
+    (``w_local``/``w_cloud``/``adj``/``offloadable``).
+    """
+    if hasattr(obj, "t_local"):
+        arrays = (obj.t_local, obj.data_in, obj.data_out, obj.offloadable)
+    elif hasattr(obj, "w_local"):
+        arrays = (obj.w_local, obj.w_cloud, obj.adj, obj.offloadable)
+    else:
+        raise TypeError(f"cannot fingerprint {type(obj).__name__}")
+    h = hashlib.sha256()
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,3 +216,95 @@ class PlacementCache:
         self._entries.clear()
         self._hits = 0
         self._misses = 0
+
+    # -- persistence -----------------------------------------------------
+    def snapshot(self, *, fingerprint: str | None = None) -> dict:
+        """JSON-serializable snapshot of the entries (oldest → newest).
+
+        ``fingerprint`` should be :func:`profile_fingerprint` of the
+        profile the masks were computed for; :meth:`load` uses it to
+        refuse snapshots taken for a different application.  Counters are
+        deliberately not persisted — a warm restart starts fresh stats.
+        """
+        return {
+            "version": SNAPSHOT_VERSION,
+            "fingerprint": fingerprint,
+            "rel_step": self.quantizer.rel_step,
+            "entries": [
+                {"key": [int(x) for x in k], "mask": [int(b) for b in v]}
+                for k, v in self._entries.items()
+            ],
+        }
+
+    def save(self, path, *, fingerprint: str | None = None) -> None:
+        pathlib.Path(path).write_text(
+            json.dumps(self.snapshot(fingerprint=fingerprint)) + "\n"
+        )
+
+    def load(
+        self,
+        source,
+        *,
+        fingerprint: str | None = None,
+        expected_n: int | None = None,
+    ) -> int:
+        """Warm-start from a snapshot ``dict`` or a JSON file path.
+
+        Forgiving by design — a serving restart must never crash on a
+        stale artifact, it just cold-starts: a missing/corrupt file, an
+        unknown schema version, a quantizer ``rel_step`` mismatch (bins
+        are not comparable) or a profile-fingerprint mismatch loads
+        nothing; individually malformed or wrong-length entries are
+        skipped.  Entries land through :meth:`store`, so a snapshot
+        larger than ``capacity`` is evicted down to capacity keeping the
+        newest (last-written) entries.  Returns the number of entries
+        loaded.
+        """
+        if isinstance(source, (str, pathlib.Path)):
+            try:
+                doc = json.loads(pathlib.Path(source).read_text())
+            except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+                return 0
+        else:
+            doc = source
+        if not isinstance(doc, dict) or doc.get("version") != SNAPSHOT_VERSION:
+            return 0
+        if fingerprint is not None and doc.get("fingerprint") != fingerprint:
+            return 0
+        try:
+            rel = float(doc.get("rel_step"))
+        except (TypeError, ValueError):
+            return 0
+        if not math.isclose(rel, self.quantizer.rel_step, rel_tol=1e-9):
+            return 0
+        entries = doc.get("entries")
+        if not isinstance(entries, list):
+            return 0
+        loaded = 0
+        for e in entries:
+            try:
+                key = tuple(int(x) for x in e["key"])
+                mask = np.asarray(e["mask"], dtype=bool)
+            except (TypeError, ValueError, KeyError):
+                continue
+            if mask.ndim != 1 or mask.size == 0:
+                continue
+            if expected_n is not None and mask.shape != (expected_n,):
+                continue
+            self.store(key, mask)
+            loaded += 1
+        return loaded
+
+    @classmethod
+    def from_snapshot(
+        cls,
+        source,
+        *,
+        fingerprint: str | None = None,
+        quantizer: EnvQuantizer | None = None,
+        capacity: int = 4096,
+    ) -> "PlacementCache":
+        """Construct and warm-start in one step (serving-restart path)."""
+        cache = cls(quantizer, capacity=capacity)
+        cache.load(source, fingerprint=fingerprint)
+        return cache

@@ -15,6 +15,7 @@ selection (interpret=True on CPU — this container — and compiled on TPU).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +45,24 @@ def default_interpret() -> bool:
     Compiled kernels on TPU; the (slow but portable) interpreter everywhere
     else — CPU CI containers, GPU hosts.  Kernel wrappers take
     ``interpret=None`` to mean "use this".
+
+    The ``REPRO_PALLAS_INTERPRET`` environment variable overrides the
+    detection without code edits (the TPU-validation knob): ``1/true/
+    yes/on`` forces interpret mode, ``0/false/no/off`` forces compiled
+    kernels.  The value is read once per process (lru_cache); call
+    ``default_interpret.cache_clear()`` after changing it.
     """
+    override = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if override is not None:
+        norm = override.strip().lower()
+        if norm in ("1", "true", "yes", "on"):
+            return True
+        if norm in ("0", "false", "no", "off"):
+            return False
+        raise ValueError(
+            f"REPRO_PALLAS_INTERPRET={override!r} is not a boolean "
+            "(use 1/true/yes/on or 0/false/no/off)"
+        )
     return not on_tpu()
 
 

@@ -11,6 +11,11 @@ Nothing here touches real hardware: failures are *injected* (tests drive
 ``mark_failed``/``heartbeat`` with a fake clock), and the manager's output
 is the thing a real deployment would act on — a new mesh shape, new tier
 specs, and a fresh MCOP placement.
+
+:meth:`ElasticMeshManager.resize` solves synchronously;
+:meth:`ElasticMeshManager.submit_resize` instead enqueues the solve on a
+:class:`repro.service.broker.OffloadBroker`, where it coalesces with
+per-user controller requests into the same per-bucket batched dispatch.
 """
 
 from __future__ import annotations
@@ -21,9 +26,23 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core.placement import PlacementPlan, StageSpec, TierSpec, plan_placement
+from repro.core.cost_models import Environment
+from repro.core.placement import (
+    PlacementPlan,
+    StageSpec,
+    TierSpec,
+    _finalize_plan,
+    build_stage_wcg,
+    plan_placement,
+)
 
-__all__ = ["DeviceState", "HeartbeatMonitor", "ElasticMeshManager", "ElasticEvent"]
+__all__ = [
+    "DeviceState",
+    "HeartbeatMonitor",
+    "ElasticMeshManager",
+    "ElasticEvent",
+    "PendingElasticEvent",
+]
 
 
 @dataclasses.dataclass
@@ -152,6 +171,10 @@ class ElasticMeshManager:
         self.tier_remote = tier_remote
         self.backend = backend
         self.events: list[ElasticEvent] = []
+        # monotone resize serials: a pending (async) resolve must never
+        # clobber self.plan with a plan older than the installed one
+        self._resize_serial = 0
+        self._plan_serial = 0
         self.plan = plan_placement(
             self.stages, tier_local, tier_remote, backend=backend
         )
@@ -160,17 +183,129 @@ class ElasticMeshManager:
     def speedup(self) -> float:
         return self.tier_remote.total_flops / self.tier_local.total_flops
 
-    def resize(self, step: int, *, local_chips: int | None = None,
-               remote_chips: int | None = None, reason: str = "failure") -> ElasticEvent:
+    def _apply_chip_counts(
+        self, local_chips: int | None, remote_chips: int | None
+    ) -> None:
+        """Shared tier mutation for resize()/submit_resize().  Validates
+        BEFORE mutating so a rejected resize leaves the tiers intact."""
+        new_local = self.tier_local.chips if local_chips is None else local_chips
+        new_remote = self.tier_remote.chips if remote_chips is None else remote_chips
+        if min(new_local, new_remote) <= 0:
+            raise RuntimeError("a tier lost all its chips; cannot re-place")
         if local_chips is not None:
             self.tier_local = dataclasses.replace(self.tier_local, chips=local_chips)
         if remote_chips is not None:
             self.tier_remote = dataclasses.replace(self.tier_remote, chips=remote_chips)
-        if min(self.tier_local.chips, self.tier_remote.chips) <= 0:
-            raise RuntimeError("a tier lost all its chips; cannot re-place")
+
+    def resize(self, step: int, *, local_chips: int | None = None,
+               remote_chips: int | None = None, reason: str = "failure") -> ElasticEvent:
+        self._apply_chip_counts(local_chips, remote_chips)
+        self._resize_serial += 1
+        self._plan_serial = self._resize_serial
         self.plan = plan_placement(
             self.stages, self.tier_local, self.tier_remote, backend=self.backend
         )
         ev = ElasticEvent(step, reason, self.tier_local, self.tier_remote, self.plan)
         self.events.append(ev)
+        return ev
+
+    # ------------------------------------------------------------------
+    def submit_resize(
+        self,
+        broker,
+        tenant: str,
+        step: int,
+        *,
+        local_chips: int | None = None,
+        remote_chips: int | None = None,
+        reason: str = "failure",
+    ) -> "PendingElasticEvent":
+        """Async :meth:`resize`: enqueue the MCOP solve on an OffloadBroker.
+
+        Elastic events are just another client of the serving tier: the
+        stage WCG is rebuilt under the new chip counts and submitted to
+        the broker's queue, joining user solves in the same coalesced
+        per-bucket dispatch at the next tick.  Recurring fleet states are
+        cache hits — the bin key encodes everything the stage WCG is
+        built from (link bandwidth, F, and the *absolute* per-tier
+        throughputs, because compute times scale with total FLOPs while
+        transfer times don't: two fleets with equal F but different
+        sizes can have different optimal cuts).  The returned handle
+        finalizes the plan — call :meth:`PendingElasticEvent.resolve`
+        after ``broker.tick()``.  ``tenant`` must be registered on the
+        broker (``profile=None`` raw-graph tenants are fine).
+        """
+        self._apply_chip_counts(local_chips, remote_chips)
+        bw = min(self.tier_local.link_bw, self.tier_remote.link_bw)
+        g = build_stage_wcg(self.stages, self.tier_local, self.tier_remote)
+        # the quantizer bins all six Environment fields, so the power
+        # slots carry the absolute tier scales into the key
+        bin_env = Environment(
+            bandwidth_up=bw,
+            bandwidth_down=bw,
+            speedup=self.speedup,
+            p_compute=self.tier_local.total_flops,
+            p_idle=self.tier_remote.total_flops,
+            p_transfer=min(
+                self.tier_local.total_hbm_bw, self.tier_remote.total_hbm_bw
+            ),
+        )
+        future = broker.submit_graph(tenant, g, bin_env)
+        self._resize_serial += 1
+        return PendingElasticEvent(
+            manager=self,
+            step=step,
+            reason=reason,
+            future=future,
+            graph=g,
+            bw=bw,
+            tier_local=self.tier_local,
+            tier_remote=self.tier_remote,
+            serial=self._resize_serial,
+        )
+
+
+@dataclasses.dataclass
+class PendingElasticEvent:
+    """A resize whose MCOP solve is in flight on the broker.
+
+    Tier specs are *captured at submit time*: overlapping resizes may
+    mutate the manager before this one resolves, and the recorded event
+    must describe the fleet state its plan was actually solved on.
+    """
+
+    manager: ElasticMeshManager
+    step: int
+    reason: str
+    future: object  # repro.service.broker.PlacementFuture
+    graph: object   # the stage WCG the solve was priced on
+    bw: float
+    tier_local: TierSpec
+    tier_remote: TierSpec
+    serial: int     # manager resize serial at submit time
+
+    @property
+    def done(self) -> bool:
+        return self.future.done
+
+    def resolve(self) -> ElasticEvent:
+        """Finalize the plan from the broker reply and record the event.
+
+        Raises if the broker has not ticked yet.  The reply is already
+        clamped and priced on :attr:`graph`, so the resulting plan
+        matches a synchronous :meth:`ElasticMeshManager.resize` under
+        the same tier state.  ``manager.plan`` is only replaced when no
+        newer resize has been installed meanwhile (out-of-order resolves
+        never roll the fleet back to a stale plan).
+        """
+        reply = self.future.result
+        mgr = self.manager
+        plan = _finalize_plan(self.graph, reply.result, self.bw)
+        if self.serial >= mgr._plan_serial:
+            mgr.plan = plan
+            mgr._plan_serial = self.serial
+        ev = ElasticEvent(
+            self.step, self.reason, self.tier_local, self.tier_remote, plan
+        )
+        mgr.events.append(ev)
         return ev

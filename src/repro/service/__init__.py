@@ -1,0 +1,42 @@
+"""Service layer: the offload broker that turns the solver into a server.
+
+``broker``   — :class:`OffloadBroker`: async multi-tenant coalescing
+               front end over ``mcop_batch`` with persistent per-tenant
+               placement caches and tick telemetry.
+``session``  — :class:`BrokerSession`: one user's adaptive loop
+               (paper Fig. 1) with solves routed through the broker.
+``workload`` — deterministic seeded multi-user environment walks for
+               tests, benchmarks and demos.
+"""
+
+from repro.service.broker import (
+    BrokerReply,
+    BrokerTelemetry,
+    OffloadBroker,
+    PlacementFuture,
+    TickReport,
+)
+from repro.service.session import BrokerSession
+from repro.service.workload import (
+    DEFAULT_REGIMES,
+    Regime,
+    WorkloadReport,
+    environment_trace,
+    run_workload,
+    user_traces,
+)
+
+__all__ = [
+    "BrokerReply",
+    "BrokerTelemetry",
+    "OffloadBroker",
+    "PlacementFuture",
+    "TickReport",
+    "BrokerSession",
+    "DEFAULT_REGIMES",
+    "Regime",
+    "WorkloadReport",
+    "environment_trace",
+    "run_workload",
+    "user_traces",
+]

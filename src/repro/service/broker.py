@@ -1,0 +1,413 @@
+"""OffloadBroker — async multi-tenant partition service (serving tier).
+
+The paper's adaptive loop (Fig. 1) is per-user: profile once, monitor
+the environment, re-partition on drift.  At serving scale millions of
+users run the *same* profiled applications through a handful of
+recurring environment regimes, so solving each repartition point
+one-at-a-time wastes both dispatches and solutions.  The broker is the
+subsystem that turns the PR-2 throughput primitives
+(:func:`repro.core.mcop.mcop_batch`,
+:class:`repro.core.placement_cache.PlacementCache`) into a long-lived
+service:
+
+* **Tenants** — one registered (profile, cost model) pair per served
+  application, each with its own shared
+  :class:`~repro.core.placement_cache.PlacementCache` guarded by a
+  :func:`~repro.core.placement_cache.profile_fingerprint`.
+* **Async submit** — per-user controllers
+  (:class:`repro.service.session.BrokerSession` wrapping
+  :class:`~repro.core.adaptive.AdaptiveController`) and elastic events
+  (:meth:`repro.runtime.elastic.ElasticMeshManager.submit_resize`)
+  enqueue solve requests and get a :class:`PlacementFuture` back.
+* **Coalescing tick** — :meth:`OffloadBroker.tick` drains the queue,
+  serves cache hits immediately, coalesces remaining requests by
+  (tenant, quantized-environment-bin) down to one representative solve
+  per bin, and flushes all representatives through **one**
+  ``mcop_batch`` call per static shape bucket.  Followers and hits are
+  repriced under their *exact* request graph (same honesty contract as
+  the controller), so a tick costs O(distinct bins), not O(requests).
+* **Persistence** — tenant caches snapshot/load as JSON
+  (:meth:`OffloadBroker.snapshot` / ``warm_start=`` on
+  :meth:`OffloadBroker.register`), so a serving restart replays a known
+  workload with *zero* solver dispatches.
+* **Telemetry** — per-tick latency, queue depth, coalesce ratio and
+  cache hit rate (:class:`BrokerTelemetry`), the numbers a deployment
+  would alert on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Sequence
+
+from repro.core import baselines
+from repro.core.cost_models import AppProfile, CostModel, Environment
+from repro.core.graph import WCG
+from repro.core.mcop import DEFAULT_BUCKETS, MCOPResult, _bucket_size, mcop_batch
+from repro.core.placement_cache import (
+    EnvQuantizer,
+    PlacementCache,
+    profile_fingerprint,
+)
+
+__all__ = [
+    "PlacementFuture",
+    "BrokerReply",
+    "TickReport",
+    "BrokerTelemetry",
+    "OffloadBroker",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BrokerReply:
+    """What a resolved :class:`PlacementFuture` carries.
+
+    ``result`` is clamped (paper §4.3) and priced under the requester's
+    exact WCG — identical to what a serial
+    :meth:`~repro.core.adaptive.AdaptiveController.observe` would have
+    produced.  ``cache_hit`` mirrors the controller's event flag
+    (coalesced followers count as hits: the serial loop would have hit
+    the representative's just-stored mask).  ``coalesced`` additionally
+    distinguishes same-tick followers from genuine cache hits.
+    """
+
+    result: MCOPResult
+    cache_hit: bool
+    coalesced: bool
+    tick: int
+
+
+class PlacementFuture:
+    """Minimal single-assignment future resolved by :meth:`OffloadBroker.tick`.
+
+    Deliberately not ``asyncio`` — the broker is deterministic and
+    tick-driven, so waiters poll :attr:`done` after a tick rather than
+    suspend on an event loop.
+    """
+
+    __slots__ = ("_reply",)
+
+    def __init__(self) -> None:
+        self._reply: BrokerReply | None = None
+
+    @property
+    def done(self) -> bool:
+        return self._reply is not None
+
+    def set(self, reply: BrokerReply) -> None:
+        if self._reply is not None:
+            raise RuntimeError("future already resolved")
+        self._reply = reply
+
+    @property
+    def result(self) -> BrokerReply:
+        if self._reply is None:
+            raise RuntimeError("future not resolved yet; run broker.tick()")
+        return self._reply
+
+
+@dataclasses.dataclass(frozen=True)
+class TickReport:
+    """One tick's telemetry snapshot."""
+
+    tick: int
+    queue_depth: int        # requests waiting when the tick started
+    requests: int           # requests drained this tick (== queue_depth)
+    cache_hits: int         # served from a tenant cache, no solve
+    coalesced: int          # same-bin followers folded into another solve
+    solved: int             # representative solves actually dispatched
+    dispatches: int         # mcop_batch calls (≤ one per shape bucket)
+    buckets: tuple[int, ...]  # bucket sizes dispatched this tick
+    latency_s: float        # wall time of the tick under the broker clock
+
+
+@dataclasses.dataclass
+class BrokerTelemetry:
+    """Aggregated across ticks; ``reports`` keeps a bounded recent window."""
+
+    ticks: int = 0
+    requests: int = 0
+    cache_hits: int = 0
+    coalesced: int = 0
+    solved: int = 0
+    dispatches: int = 0
+    max_queue_depth: int = 0
+    total_latency_s: float = 0.0
+    reports: list[TickReport] = dataclasses.field(default_factory=list)
+    keep_reports: int = 256
+
+    def record(self, report: TickReport) -> None:
+        self.ticks += 1
+        self.requests += report.requests
+        self.cache_hits += report.cache_hits
+        self.coalesced += report.coalesced
+        self.solved += report.solved
+        self.dispatches += report.dispatches
+        self.max_queue_depth = max(self.max_queue_depth, report.queue_depth)
+        self.total_latency_s += report.latency_s
+        self.reports.append(report)
+        del self.reports[: -self.keep_reports]
+
+    @property
+    def coalesce_ratio(self) -> float:
+        """Fraction of requests that did NOT need their own solve."""
+        return 1.0 - self.solved / self.requests if self.requests else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.requests if self.requests else 0.0
+
+    @property
+    def mean_tick_latency_s(self) -> float:
+        return self.total_latency_s / self.ticks if self.ticks else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "ticks": self.ticks,
+            "requests": self.requests,
+            "cache_hits": self.cache_hits,
+            "coalesced": self.coalesced,
+            "solved": self.solved,
+            "dispatches": self.dispatches,
+            "max_queue_depth": self.max_queue_depth,
+            "coalesce_ratio": round(self.coalesce_ratio, 4),
+            "hit_rate": round(self.hit_rate, 4),
+            "mean_tick_latency_s": self.mean_tick_latency_s,
+        }
+
+
+@dataclasses.dataclass
+class _Tenant:
+    name: str
+    profile: AppProfile | None
+    cost_model: CostModel | None
+    cache: PlacementCache
+    fingerprint: str | None
+
+
+@dataclasses.dataclass
+class _Request:
+    tenant: _Tenant
+    g: WCG
+    key: tuple[int, ...]
+    future: PlacementFuture
+
+
+class OffloadBroker:
+    """Coalescing tick-driven front end over the batched MCOP engine.
+
+    Parameters:
+      backend:  MCOP batch backend for the solves ("jax", "pallas",
+                "reference" — the latter loops the numpy oracle, used by
+                parity tests).
+      buckets:  static shape buckets; each tick issues at most one
+                ``mcop_batch`` call per bucket, shared across tenants.
+      clock:    injectable monotonic clock for tick-latency telemetry
+                (tests pass a fake clock so reports are deterministic).
+    """
+
+    def __init__(
+        self,
+        *,
+        backend: str = "jax",
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if backend not in ("reference", "jax", "pallas"):
+            raise ValueError(f"unknown MCOP batch backend: {backend!r}")
+        self.backend = backend
+        self.buckets = tuple(buckets)
+        self.clock = clock
+        self.telemetry = BrokerTelemetry()
+        self._tenants: dict[str, _Tenant] = {}
+        self._queue: deque[_Request] = deque()
+        self._tick = 0
+
+    # -- tenants ---------------------------------------------------------
+    def register(
+        self,
+        name: str,
+        profile: AppProfile | None = None,
+        cost_model: CostModel | None = None,
+        *,
+        cache: PlacementCache | None = None,
+        quantizer: EnvQuantizer | None = None,
+        cache_capacity: int = 4096,
+        warm_start=None,
+    ) -> _Tenant:
+        """Register a served application (or a raw-graph producer).
+
+        With a ``profile`` + ``cost_model`` the tenant accepts
+        :meth:`submit`; raw-graph tenants (e.g. the elastic manager,
+        whose WCG is built from stage/tier specs) use
+        :meth:`submit_graph` and may register with ``profile=None``.
+        ``warm_start`` is a snapshot dict or JSON path loaded into the
+        tenant cache under the profile's fingerprint guard — a
+        mismatched or corrupt snapshot cold-starts silently.
+        """
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        if (profile is None) != (cost_model is None):
+            raise ValueError("profile and cost_model must be given together")
+        # the snapshot guard covers the whole (profile, objective) pair: a
+        # cache warmed under one cost model must not serve another
+        fingerprint = (
+            f"{profile_fingerprint(profile)}:{cost_model.fingerprint}"
+            if profile is not None
+            else None
+        )
+        if cache is None:
+            cache = PlacementCache(quantizer, capacity=cache_capacity)
+        tenant = _Tenant(name, profile, cost_model, cache, fingerprint)
+        if warm_start is not None:
+            cache.load(warm_start, fingerprint=fingerprint)
+        self._tenants[name] = tenant
+        return tenant
+
+    def tenant(self, name: str) -> _Tenant:
+        return self._tenants[name]
+
+    def snapshot(self, name: str) -> dict:
+        """Fingerprint-stamped snapshot of one tenant's cache."""
+        t = self._tenants[name]
+        return t.cache.snapshot(fingerprint=t.fingerprint)
+
+    def save_snapshot(self, name: str, path) -> None:
+        t = self._tenants[name]
+        t.cache.save(path, fingerprint=t.fingerprint)
+
+    # -- submission ------------------------------------------------------
+    def submit(self, name: str, env: Environment) -> PlacementFuture:
+        """Enqueue a solve for ``env`` under the tenant's cost model."""
+        t = self._tenants[name]
+        if t.profile is None:
+            raise ValueError(
+                f"tenant {name!r} has no profile; use submit_graph()"
+            )
+        g = t.cost_model.build(t.profile, env)
+        return self.submit_graph(name, g, env)
+
+    def submit_graph(self, name: str, g: WCG, env: Environment) -> PlacementFuture:
+        """Enqueue a caller-built WCG; ``env`` only determines the bin key."""
+        t = self._tenants[name]
+        future = PlacementFuture()
+        self._queue.append(_Request(t, g, t.cache.key(env), future))
+        return future
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- the tick --------------------------------------------------------
+    def tick(self) -> TickReport:
+        """Drain the queue: hits → followers → one dispatch per bucket.
+
+        Requests are processed in FIFO order, so cache counters and
+        placements are bit-identical to N serial controllers sharing one
+        cache and observing in submission order (asserted by the
+        broker↔serial parity tests).
+
+        Failure containment: if a solve dispatch raises (transient
+        device/XLA error), every request whose future is still unresolved
+        is put back at the front of the queue before the exception
+        propagates, so the next :meth:`tick` retries instead of stranding
+        waiters forever.
+        """
+        t0 = self.clock()
+        self._tick += 1
+        requests = list(self._queue)
+        self._queue.clear()
+        try:
+            return self._run_tick(requests, t0)
+        except BaseException:
+            self._queue.extendleft(
+                r for r in reversed(requests) if not r.future.done
+            )
+            raise
+
+    def _run_tick(self, requests: list[_Request], t0: float) -> TickReport:
+        depth = len(requests)
+        hits = coalesced = 0
+        solves: list[_Request] = []
+        # coalescing key includes the vertex count: a raw-graph tenant may
+        # legally mix graph sizes in one env bin, and a follower must never
+        # be handed a wrong-length mask (mirrors the cache's expected_n)
+        rep_slot: dict[tuple[str, int, tuple[int, ...]], int] = {}
+        followers: dict[int, list[_Request]] = {}
+        for r in requests:
+            mask = r.tenant.cache.lookup(r.key, expected_n=r.g.n)
+            if mask is not None:
+                r.tenant.cache.record(True)
+                hits += 1
+                r.future.set(
+                    BrokerReply(
+                        baselines.reprice_clamped(r.g, mask),
+                        cache_hit=True,
+                        coalesced=False,
+                        tick=self._tick,
+                    )
+                )
+                continue
+            slot_key = (r.tenant.name, r.g.n, r.key)
+            if slot_key in rep_slot:
+                coalesced += 1
+                followers.setdefault(rep_slot[slot_key], []).append(r)
+                continue
+            rep_slot[slot_key] = len(solves)
+            solves.append(r)
+
+        # one mcop_batch call per static shape bucket, shared across tenants
+        by_bucket: dict[int, list[int]] = {}
+        for i, r in enumerate(solves):
+            by_bucket.setdefault(_bucket_size(r.g.n, self.buckets), []).append(i)
+        solved: list[MCOPResult | None] = [None] * len(solves)
+        dispatches = 0
+        for m, idxs in sorted(by_bucket.items()):
+            batch = mcop_batch(
+                [solves[i].g for i in idxs], backend=self.backend, buckets=(m,)
+            )
+            dispatches += 1
+            for i, res in zip(idxs, batch):
+                solved[i] = res
+
+        # counter recording for misses/followers happens here, after the
+        # dispatches succeeded: a failed tick re-queues these requests, and
+        # the retry must not double-count them (a serial shared-cache loop
+        # would count each request exactly once).  Followers count as hits:
+        # serially they would have hit the representative's put().
+        for slot, r in enumerate(solves):
+            candidate = baselines.clamp_no_offloading(r.g, solved[slot])
+            r.tenant.cache.record(False)
+            r.tenant.cache.store(r.key, candidate.local_mask)
+            r.future.set(
+                BrokerReply(
+                    candidate, cache_hit=False, coalesced=False, tick=self._tick
+                )
+            )
+            for f in followers.get(slot, []):
+                f.tenant.cache.record(True)
+                f.future.set(
+                    BrokerReply(
+                        baselines.reprice_clamped(f.g, candidate.local_mask),
+                        cache_hit=True,
+                        coalesced=True,
+                        tick=self._tick,
+                    )
+                )
+
+        report = TickReport(
+            tick=self._tick,
+            queue_depth=depth,
+            requests=depth,
+            cache_hits=hits,
+            coalesced=coalesced,
+            solved=len(solves),
+            dispatches=dispatches,
+            buckets=tuple(sorted(by_bucket)),
+            latency_s=self.clock() - t0,
+        )
+        self.telemetry.record(report)
+        return report

@@ -1,0 +1,114 @@
+"""Per-user adaptive sessions driven through a shared OffloadBroker.
+
+A :class:`BrokerSession` is one user's paper-Fig.-1 loop
+(:class:`~repro.core.adaptive.AdaptiveController`) with the *solve*
+routed through an :class:`~repro.service.broker.OffloadBroker` instead
+of a private ``mcop()`` call.  The controller's
+``begin_step``/``commit_step`` split makes this exact: the drift +
+cooldown decision (which never depends on solver output) is taken
+synchronously at :meth:`BrokerSession.observe`, the placement arrives at
+the broker's next tick, and :meth:`BrokerSession.drain` commits events
+in observation order — bit-identical to a serial ``observe()`` loop over
+controllers sharing one :class:`~repro.core.placement_cache.PlacementCache`
+(see the broker↔serial parity tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+from repro.core.adaptive import AdaptationEvent, AdaptiveController
+from repro.core.cost_models import Environment
+from repro.core.graph import WCG
+from repro.service.broker import OffloadBroker, PlacementFuture
+
+__all__ = ["BrokerSession"]
+
+
+@dataclasses.dataclass
+class _PendingStep:
+    g: WCG
+    env: Environment
+    due: bool
+    future: PlacementFuture | None  # None when no repartition was due
+    step: int  # controller step at observation time (events carry this)
+
+
+class BrokerSession:
+    """One tenant user: observations in, broker-resolved events out.
+
+    The wrapped controller carries ``cache=None`` — the shared cache
+    lives in the broker's tenant and is consulted inside the tick, so
+    N sessions of one tenant get the multi-user reuse win without each
+    holding cache state.
+    """
+
+    def __init__(
+        self,
+        broker: OffloadBroker,
+        tenant: str,
+        *,
+        threshold: float = 0.10,
+        min_interval: int = 1,
+    ):
+        t = broker.tenant(tenant)
+        if t.profile is None:
+            raise ValueError(f"tenant {tenant!r} has no profile/cost model")
+        self.broker = broker
+        self.tenant = tenant
+        self.controller = AdaptiveController(
+            t.profile,
+            t.cost_model,
+            threshold=threshold,
+            min_interval=min_interval,
+            backend=broker.backend,
+            cache=None,
+        )
+        self._pending: deque[_PendingStep] = deque()
+
+    def observe(self, env: Environment) -> None:
+        """Feed one measurement; enqueues a solve if repartition is due.
+
+        The resulting event materializes at :meth:`drain` after the
+        broker's next :meth:`~repro.service.broker.OffloadBroker.tick`.
+        """
+        g, due = self.controller.begin_step(env)
+        future = self.broker.submit_graph(self.tenant, g, env) if due else None
+        self._pending.append(
+            _PendingStep(g, env, due, future, self.controller._step)
+        )
+
+    def drain(self) -> list[AdaptationEvent]:
+        """Commit every resolved observation, in order; stops at the
+        first one still waiting on a future tick."""
+        events: list[AdaptationEvent] = []
+        while self._pending:
+            step = self._pending[0]
+            if step.due and not step.future.done:
+                break
+            self._pending.popleft()
+            if step.due:
+                reply = step.future.result
+                event = self.controller.commit_step(
+                    step.g,
+                    step.env,
+                    reply.result,
+                    repartitioned=True,
+                    cache_hit=reply.cache_hit,
+                    step=step.step,
+                )
+            else:
+                event = self.controller.commit_step(
+                    step.g, step.env, None, repartitioned=False, step=step.step
+                )
+            events.append(event)
+        return events
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def history(self) -> list[AdaptationEvent]:
+        return self.controller.history

@@ -1,0 +1,160 @@
+"""Deterministic simulated multi-user workload for the offload broker.
+
+N users walk :class:`~repro.profilers.network.SimulatedChannel`-style
+environment traces: each regime has a true (bandwidth, speedup) pair and
+observations carry small relative measurement noise, so users in the
+same regime land in the same quantized cache bin while the trace still
+exercises the drift detector.  Everything is seeded — traces replay
+bit-identically, which is what makes the broker's warm-restart claim
+testable (same trace + warm cache ⇒ zero solver dispatches) and keeps
+the service tests in tier-1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.adaptive import AdaptationEvent
+from repro.core.cost_models import Environment
+from repro.service.broker import OffloadBroker
+from repro.service.session import BrokerSession
+
+__all__ = [
+    "Regime",
+    "DEFAULT_REGIMES",
+    "environment_trace",
+    "user_traces",
+    "WorkloadReport",
+    "run_workload",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Regime:
+    """One recurring mobile environment (paper §7 scenarios)."""
+
+    name: str
+    bandwidth: float  # MB/s, symmetric up/down
+    speedup: float    # the paper's F
+
+
+DEFAULT_REGIMES: tuple[Regime, ...] = (
+    Regime("wifi", 8.0, 3.0),
+    Regime("lte", 2.5, 3.0),
+    Regime("3g", 1.2, 3.0),
+    Regime("congested", 0.3, 3.0),
+    Regime("cloud-degraded", 0.3, 1.5),
+)
+
+
+def environment_trace(
+    steps: int,
+    *,
+    regimes: Sequence[Regime] = DEFAULT_REGIMES,
+    seed: int = 0,
+    dwell: tuple[int, int] = (2, 5),
+    rel_noise: float = 0.02,
+) -> list[Environment]:
+    """One user's seeded walk: dwell in a regime, hop to a neighbor.
+
+    ``rel_noise`` (2% default) is well inside the cache quantizer's 10%
+    bins, so repeated visits to a regime hit the same bin — the recurring
+    structure the broker exploits — while differing measurements still
+    flow through the drift detector.
+    """
+    rng = np.random.default_rng(seed)
+    trace: list[Environment] = []
+    regime = int(rng.integers(len(regimes)))
+    while len(trace) < steps:
+        stay = int(rng.integers(dwell[0], dwell[1] + 1))
+        r = regimes[regime]
+        for _ in range(min(stay, steps - len(trace))):
+            noise_b, noise_f = 1.0 + rel_noise * rng.standard_normal(2)
+            trace.append(
+                Environment.symmetric(r.bandwidth * noise_b, r.speedup * noise_f)
+            )
+        # hop to an adjacent regime (environments drift, they don't teleport)
+        regime = int(
+            np.clip(regime + rng.choice((-1, 1)), 0, len(regimes) - 1)
+        )
+    return trace
+
+
+def user_traces(
+    n_users: int,
+    steps: int,
+    *,
+    seed: int = 0,
+    regimes: Sequence[Regime] = DEFAULT_REGIMES,
+    **kw,
+) -> list[list[Environment]]:
+    """Per-user traces; user u gets the seeded walk ``seed + u``."""
+    return [
+        environment_trace(steps, regimes=regimes, seed=seed + u, **kw)
+        for u in range(n_users)
+    ]
+
+
+@dataclasses.dataclass
+class WorkloadReport:
+    """Everything a test or benchmark needs to audit one workload run."""
+
+    events: list[list[AdaptationEvent]]   # [user][step]
+    traces: list[list[Environment]]       # the envs that were replayed
+    ticks: int
+
+    @property
+    def n_repartitions(self) -> int:
+        return sum(e.repartitioned for evs in self.events for e in evs)
+
+    @property
+    def n_cache_hits(self) -> int:
+        return sum(e.cache_hit for evs in self.events for e in evs)
+
+
+def run_workload(
+    broker: OffloadBroker,
+    tenant: str,
+    *,
+    n_users: int,
+    steps: int,
+    threshold: float = 0.15,
+    min_interval: int = 2,
+    seed: int = 0,
+    regimes: Sequence[Regime] = DEFAULT_REGIMES,
+    traces: Sequence[Sequence[Environment]] | None = None,
+) -> WorkloadReport:
+    """Drive N users through the broker, one tick per timestep.
+
+    Per tick every user observes its next environment (enqueuing solves
+    for due repartitions), the broker flushes once, and sessions drain —
+    the serving loop in miniature.  Pass ``traces`` to replay a known
+    workload (e.g. against a warm-started broker); otherwise seeded
+    traces are generated with :func:`user_traces`.
+    """
+    if traces is None:
+        traces = user_traces(
+            n_users, steps, seed=seed, regimes=regimes
+        )
+    else:
+        traces = [list(t) for t in traces]
+        if len(traces) != n_users or any(len(t) != steps for t in traces):
+            raise ValueError("traces must be n_users × steps")
+    sessions = [
+        BrokerSession(
+            broker, tenant, threshold=threshold, min_interval=min_interval
+        )
+        for _ in range(n_users)
+    ]
+    events: list[list[AdaptationEvent]] = [[] for _ in range(n_users)]
+    for t in range(steps):
+        for session, trace in zip(sessions, traces):
+            session.observe(trace[t])
+        broker.tick()
+        for u, session in enumerate(sessions):
+            events[u].extend(session.drain())
+    assert all(s.pending == 0 for s in sessions)
+    return WorkloadReport(events=events, traces=traces, ticks=steps)

@@ -187,3 +187,35 @@ def test_mcop_kernel_paper_example():
     cut, mask = mcop_min_cut(g.adj, g.w_local, g.w_cloud, g.offloadable)
     assert cut == pytest.approx(22.0)
     assert (mask == mcop_reference(g).local_mask).all()
+
+
+# ----------------------------------------------------------------------
+# Interpret-mode selection
+# ----------------------------------------------------------------------
+
+
+def test_default_interpret_env_override(monkeypatch):
+    """REPRO_PALLAS_INTERPRET forces/suppresses interpret mode without
+    code edits (the TPU-validation knob); unset falls back to backend
+    detection, garbage raises."""
+    from repro.kernels import ops
+
+    try:
+        for raw, want in [
+            ("1", True), ("true", True), ("YES", True), (" on ", True),
+            ("0", False), ("false", False), ("No", False), ("off", False),
+        ]:
+            monkeypatch.setenv("REPRO_PALLAS_INTERPRET", raw)
+            ops.default_interpret.cache_clear()
+            assert ops.default_interpret() is want, raw
+
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "maybe")
+        ops.default_interpret.cache_clear()
+        with pytest.raises(ValueError):
+            ops.default_interpret()
+
+        monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+        ops.default_interpret.cache_clear()
+        assert ops.default_interpret() is (not ops.on_tpu())
+    finally:
+        ops.default_interpret.cache_clear()
