@@ -8,13 +8,15 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
     gains           → Figs. 17–19 (schemes vs B and F; 3 cost models)
     optimality_gap  → beyond-paper: Theorem 1 gap quantification
     mcop_backends   → §3.1 real-time requirement (ref vs jit vs batched vs Pallas)
+    pipeline        → fused env→placement pipeline vs the object path
     broker          → serving tier: multi-user tick throughput, warm restarts
     roofline        → §Roofline table from the dry-run artifact
 
-The mcop_backends rows are additionally appended to ``BENCH_mcop.json``
-and the broker rows to ``BENCH_broker.json`` (bounded trajectories of
-runs), so backend/batching/serving speedups can be tracked across
-commits; the broker artifact is smoke-checked after every append.
+The mcop_backends rows are additionally appended to ``BENCH_mcop.json``,
+the broker rows to ``BENCH_broker.json`` and the pipeline rows to
+``BENCH_pipeline.json`` (bounded trajectories of runs), so
+backend/batching/serving speedups can be tracked across commits; the
+broker and pipeline artifacts are smoke-checked after every append.
 """
 
 from __future__ import annotations
@@ -32,6 +34,7 @@ from benchmarks import (
     gains,
     mcop_backends,
     optimality_gap,
+    pipeline,
     roofline,
 )
 
@@ -40,6 +43,7 @@ MODULES = {
     "gains": gains,
     "optimality_gap": optimality_gap,
     "mcop_backends": mcop_backends,
+    "pipeline": pipeline,
     "broker": broker,
     "compression_ablation": compression_ablation,
     "roofline": roofline,
@@ -51,6 +55,7 @@ MODULES = {
 _REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 _TRAJECTORY_PATH = _REPO_ROOT / "BENCH_mcop.json"
 _BROKER_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_broker.json"
+_PIPELINE_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_pipeline.json"
 _TRAJECTORY_KEEP = 50  # bounded history of runs
 
 
@@ -134,6 +139,10 @@ def main(argv=None) -> int:
                 _append_trajectory(rows, _BROKER_TRAJECTORY_PATH, "broker")
                 _smoke_check_trajectory(_BROKER_TRAJECTORY_PATH, "broker")
                 print("broker/smoke,0.00,BENCH_broker.json ok", flush=True)
+            elif name == "pipeline":
+                _append_trajectory(rows, _PIPELINE_TRAJECTORY_PATH, "pipeline")
+                _smoke_check_trajectory(_PIPELINE_TRAJECTORY_PATH, "pipeline")
+                print("pipeline/smoke,0.00,BENCH_pipeline.json ok", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}/ERROR,0.00,{e!r}", flush=True)

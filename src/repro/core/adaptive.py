@@ -41,7 +41,7 @@ import numpy as np
 from repro.core import baselines
 from repro.core.cost_models import AppProfile, CostModel, Environment, offloading_gain
 from repro.core.graph import WCG
-from repro.core.mcop import MCOPResult, mcop, mcop_batch
+from repro.core.mcop import MCOPResult, mcop, solve_envs
 from repro.core.placement_cache import PlacementCache
 
 __all__ = ["EnvironmentDrift", "AdaptiveController", "AdaptationEvent"]
@@ -257,14 +257,16 @@ class AdaptiveController:
 
     # ------------------------------------------------------------------
     def sweep(self, envs: Sequence[Environment]) -> list[AdaptationEvent]:
-        """Batched Fig.-1 loop: one ``mcop_batch`` dispatch per sweep.
+        """Batched Fig.-1 loop: one fused ``solve_envs`` dispatch per sweep.
 
         Semantics match calling :meth:`observe` per environment (identical
         events when ``cache is None``), but all repartition points are
         solved together: pass 1 replays the drift/cooldown decision
         sequence (which never depends on solver output), pass 2 resolves
-        each repartition from the cache or the batched solve, pass 3
-        emits events with the usual stale-placement repricing.
+        each repartition from the cache or the fused build+solve program
+        (WCG construction happens on-device, inside the same XLA program
+        as the solver), pass 3 emits events with the usual
+        stale-placement repricing priced on one vectorized host build.
 
         Exact cache-counter parity with the serial loop assumes the cache
         capacity exceeds the number of distinct environment bins in one
@@ -293,8 +295,11 @@ class AdaptiveController:
                 steps_since = 0
                 have_current = True
 
-        # ---- pass 2: resolve each repartition (cache or batched solve) -
-        graphs = [self.cost_model.build(self.profile, e) for e in envs]
+        # ---- pass 2: resolve each repartition (cache or fused solve) ---
+        # One vectorized host build (for exact f64 pricing/repricing) in
+        # place of K per-environment Python constructions; rows are
+        # bit-identical to cost_model.build(profile, env).
+        batch = self.cost_model.build_batch(self.profile, envs)
         # per repartition step: ("mask", mask) — cache hit; ("solve", slot)
         # — own batched solve; ("reuse", slot) — same-bin reuse in-sweep
         source: dict[int, tuple] = {}
@@ -308,7 +313,7 @@ class AdaptiveController:
                 solve_steps.append(i)
                 continue
             key = self.cache.key(env)
-            mask = self.cache.lookup(key, expected_n=graphs[i].n)
+            mask = self.cache.lookup(key, expected_n=self.profile.n)
             if mask is not None:
                 self.cache.record(True)
                 source[i] = ("mask", mask)
@@ -323,13 +328,20 @@ class AdaptiveController:
                 solve_steps.append(i)
                 pending[key] = slot
                 source[i] = ("solve", slot)
+        # the misses flush through the fused build+solve program: one XLA
+        # dispatch constructs their WCGs on-device and runs Stoer–Wagner
         solved = (
-            mcop_batch([graphs[i] for i in solve_steps], backend=self.backend)
+            solve_envs(
+                self.profile,
+                self.cost_model,
+                [envs[i] for i in solve_steps],
+                backend=self.backend,
+            )
             if solve_steps
             else []
         )
         clamped_solved = [
-            self._clamp(graphs[solve_steps[s]], r) for s, r in enumerate(solved)
+            self._clamp(batch.wcg(solve_steps[s]), r) for s, r in enumerate(solved)
         ]
         if self.cache is not None:
             for key, slot in pending.items():
@@ -340,7 +352,7 @@ class AdaptiveController:
         for i, env in enumerate(envs):
             self._step += 1
             self._steps_since += 1
-            g = graphs[i]
+            g = batch.wcg(i)
             cache_hit = False
             if decisions[i]:
                 kind, payload = source[i]

@@ -18,18 +18,36 @@ Offloading gains (Eqs. 5/7/9) are provided as
 Hardware constants default to the paper's HP iPAQ measurements
 (P_m≈0.9 W, P_i≈0.3 W, P_tr≈1.3 W, §7.1) so the reproduction figures are
 directly comparable to Figs. 17–19.
+
+The models are *batch-first*: each implements
+:meth:`CostModel.batch_weights` — pure array arithmetic mapping a profile
+plus K stacked environments (:class:`EnvArrays`) to K graphs' weight
+tensors.  The math is written polymorphically, so the same code path
+serves two callers:
+
+* host construction (numpy float64): :meth:`CostModel.build_batch`
+  returns a :class:`~repro.core.graph.WCGBatch`, and the scalar
+  :meth:`CostModel.build` is literally a batch of one — bit-identical to
+  the historical per-environment builders;
+* device construction (jax, traced): ``repro.core.mcop.solve_envs`` jits
+  ``batch_weights`` *together with* the Stoer–Wagner solver, so an
+  environment sweep compiles to one XLA program with no per-environment
+  host work at all.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple, Sequence
 
+import jax
 import numpy as np
 
-from repro.core.graph import WCG
+from repro.core.graph import WCG, WCGBatch
 
 __all__ = [
     "Environment",
+    "EnvArrays",
     "AppProfile",
     "CostModel",
     "ResponseTimeModel",
@@ -64,6 +82,36 @@ class Environment:
 
     def replace(self, **kw) -> "Environment":
         return dataclasses.replace(self, **kw)
+
+
+class EnvArrays(NamedTuple):
+    """K environments as six (k,) arrays — the batched Environment.
+
+    A NamedTuple is automatically a JAX pytree, so an ``EnvArrays`` can be
+    passed straight into a jitted build+solve program.
+    """
+
+    bandwidth_up: np.ndarray
+    bandwidth_down: np.ndarray
+    speedup: np.ndarray
+    p_compute: np.ndarray
+    p_idle: np.ndarray
+    p_transfer: np.ndarray
+
+    @classmethod
+    def from_envs(cls, envs: Sequence[Environment], dtype=np.float64) -> "EnvArrays":
+        return cls(
+            np.array([e.bandwidth_up for e in envs], dtype),
+            np.array([e.bandwidth_down for e in envs], dtype),
+            np.array([e.speedup for e in envs], dtype),
+            np.array([e.p_compute for e in envs], dtype),
+            np.array([e.p_idle for e in envs], dtype),
+            np.array([e.p_transfer for e in envs], dtype),
+        )
+
+    @property
+    def k(self) -> int:
+        return int(self.speedup.shape[0])
 
 
 @dataclasses.dataclass
@@ -110,19 +158,40 @@ class AppProfile:
         )
 
 
-def _edge_time(profile: AppProfile, env: Environment) -> np.ndarray:
-    """Eq. 1: w(e(v_i, v_j)) = in_ij/B_up + out_ij/B_down, symmetrised.
+def _ns(x):
+    """numpy or jax.numpy namespace matching ``x``.
+
+    The batched weight math below is written once and dispatched here:
+    host callers pass numpy float64 (bit-identical to the historical
+    scalar builders), the fused device path passes traced jax arrays.
+    """
+    import jax.numpy as jnp
+
+    return jnp if isinstance(x, jax.Array) else np
+
+
+def _edge_time_batch(data_in, data_out, env: EnvArrays):
+    """Eq. 1, batched: w(e(v_i, v_j)) = in_ij/B_up + out_ij/B_down, symmetrised.
 
     The communication charge is paid once per cut edge regardless of
     direction, so the WCG edge weight is the *total* transfer time across
-    the (i, j) boundary.
+    the (i, j) boundary.  ``data_in``/``data_out`` are (n, n); the result
+    is (k, n, n).
     """
-    per_dir = profile.data_in / env.bandwidth_up + profile.data_out / env.bandwidth_down
-    return per_dir + per_dir.T
+    xp = _ns(env.bandwidth_up)
+    per_dir = (
+        data_in[None] / env.bandwidth_up[:, None, None]
+        + data_out[None] / env.bandwidth_down[:, None, None]
+    )
+    return per_dir + xp.swapaxes(per_dir, -1, -2)
 
 
 class CostModel:
-    """Base: maps (profile, environment) → WCG.  Subclasses fill weights."""
+    """Base: maps (profile, environments) → WCG / WCGBatch weights.
+
+    Subclasses implement :meth:`batch_weights` only; the scalar
+    :meth:`build` and the host :meth:`build_batch` both ride on it.
+    """
 
     name = "abstract"
 
@@ -131,11 +200,47 @@ class CostModel:
         """Identity of the *objective* for cache-persistence guards: a
         placement cached under one cost model must not warm-start a
         tenant optimizing another.  Parametric models must fold their
-        parameters in (see :class:`WeightedModel`)."""
+        parameters in (see :class:`WeightedModel`).  Two instances with
+        equal fingerprints must price identically — ``solve_envs`` keys
+        its compiled build+solve programs on the fingerprint."""
         return self.name
 
-    def build(self, profile: AppProfile, env: Environment) -> WCG:
+    def batch_weights(self, t_local, data_in, data_out, env: EnvArrays):
+        """Pure array math: profile tensors + K environments → weights.
+
+        Inputs may be numpy or traced jax arrays; returns
+        ``(w_local (k, n), w_cloud (k, n), adj (k, n, n))``.  Zero-padded
+        profile columns stay zero, so callers may pass padded tensors.
+        """
         raise NotImplementedError
+
+    def build_batch(
+        self,
+        profile: AppProfile,
+        envs: Sequence[Environment],
+        *,
+        m: int | None = None,
+        dtype=np.float64,
+    ) -> WCGBatch:
+        """K environments → one :class:`WCGBatch` (vectorized host build).
+
+        Row ``i`` is bit-identical to ``self.build(profile, envs[i])``;
+        ``m`` optionally zero-pads to a solver bucket size.
+        """
+        wl, wc, adj = self.batch_weights(
+            np.asarray(profile.t_local, dtype),
+            np.asarray(profile.data_in, dtype),
+            np.asarray(profile.data_out, dtype),
+            EnvArrays.from_envs(envs, dtype),
+        )
+        return WCGBatch.pack(
+            wl, wc, adj, np.broadcast_to(profile.offloadable, wl.shape),
+            m=m, names=profile.names, dtype=dtype,
+        )
+
+    def build(self, profile: AppProfile, env: Environment) -> WCG:
+        """Scalar front door — a batch of one over the same code path."""
+        return self.build_batch(profile, [env]).wcg(0)
 
     def local_total(self, profile: AppProfile, env: Environment) -> float:
         """Cost of the no-offloading scheme (denominator of the gains)."""
@@ -147,16 +252,11 @@ class ResponseTimeModel(CostModel):
 
     name = "time"
 
-    def build(self, profile: AppProfile, env: Environment) -> WCG:
-        t_l = profile.t_local
-        t_c = t_l / env.speedup  # T_v^l = F · T_v^c  (F > 1)
-        return WCG(
-            w_local=t_l,
-            w_cloud=t_c,
-            adj=_edge_time(profile, env),
-            offloadable=profile.offloadable,
-            names=list(profile.names),
-        )
+    def batch_weights(self, t_local, data_in, data_out, env: EnvArrays):
+        xp = _ns(env.speedup)
+        t_c = t_local[None, :] / env.speedup[:, None]  # T_v^l = F · T_v^c  (F > 1)
+        t_l = xp.broadcast_to(t_local[None, :], t_c.shape)
+        return t_l, t_c, _edge_time_batch(data_in, data_out, env)
 
 
 class EnergyModel(CostModel):
@@ -168,15 +268,12 @@ class EnergyModel(CostModel):
 
     name = "energy"
 
-    def build(self, profile: AppProfile, env: Environment) -> WCG:
-        t_l = profile.t_local
-        t_c = t_l / env.speedup
-        return WCG(
-            w_local=env.p_compute * t_l,
-            w_cloud=env.p_idle * t_c,
-            adj=env.p_transfer * _edge_time(profile, env),
-            offloadable=profile.offloadable,
-            names=list(profile.names),
+    def batch_weights(self, t_local, data_in, data_out, env: EnvArrays):
+        t_c = t_local[None, :] / env.speedup[:, None]
+        return (
+            env.p_compute[:, None] * t_local[None, :],
+            env.p_idle[:, None] * t_c,
+            env.p_transfer[:, None, None] * _edge_time_batch(data_in, data_out, env),
         )
 
 
@@ -202,18 +299,17 @@ class WeightedModel(CostModel):
     def fingerprint(self) -> str:
         return f"{self.name}:{self.omega!r}"
 
-    def build(self, profile: AppProfile, env: Environment) -> WCG:
-        gt = self._time.build(profile, env)
-        ge = self._energy.build(profile, env)
-        t_norm = max(float(gt.w_local.sum()), 1e-30)  # T_local
-        e_norm = max(float(ge.w_local.sum()), 1e-30)  # E_local
+    def batch_weights(self, t_local, data_in, data_out, env: EnvArrays):
+        xp = _ns(env.speedup)
+        wl_t, wc_t, adj_t = self._time.batch_weights(t_local, data_in, data_out, env)
+        wl_e, wc_e, adj_e = self._energy.batch_weights(t_local, data_in, data_out, env)
+        t_norm = xp.maximum(wl_t.sum(axis=-1), 1e-30)[:, None]  # T_local per graph
+        e_norm = xp.maximum(wl_e.sum(axis=-1), 1e-30)[:, None]  # E_local per graph
         w = self.omega
-        return WCG(
-            w_local=w * gt.w_local / t_norm + (1 - w) * ge.w_local / e_norm,
-            w_cloud=w * gt.w_cloud / t_norm + (1 - w) * ge.w_cloud / e_norm,
-            adj=w * gt.adj / t_norm + (1 - w) * ge.adj / e_norm,
-            offloadable=profile.offloadable,
-            names=list(profile.names),
+        return (
+            w * wl_t / t_norm + (1 - w) * wl_e / e_norm,
+            w * wc_t / t_norm + (1 - w) * wc_e / e_norm,
+            w * adj_t / t_norm[..., None] + (1 - w) * adj_e / e_norm[..., None],
         )
 
 

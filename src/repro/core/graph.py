@@ -17,17 +17,26 @@ Builders are provided for every topology in the paper's Fig. 2 (linear,
 loop, tree, mesh) plus random connected graphs for property tests, the
 reconstructed 6-node worked example of §5.5, and the face-recognition call
 tree of Fig. 12.
+
+:class:`WCGBatch` is the array-native sibling: K environments' worth of
+WCGs stacked into ``(k, m[, m])`` tensors sharing one static topology
+(vertex count, labels, padding layout).  It is a registered JAX pytree, so
+cost models can *build* it inside a jitted program and the batched solver
+(`mcop.mcop_batch` / `mcop.solve_envs`) can consume it without any
+per-environment Python graph objects on the hot path.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Any, Callable, Sequence
 
+import jax
 import numpy as np
 
 __all__ = [
     "WCG",
+    "WCGBatch",
     "linear_graph",
     "loop_graph",
     "tree_graph",
@@ -156,6 +165,183 @@ class WCG:
             offloadable=self.offloadable.copy(),
             names=list(self.names),
         )
+
+
+# ----------------------------------------------------------------------
+# WCGBatch — K environments of one topology as stacked tensors.
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class WCGBatch:
+    """K stacked WCGs over one static topology (the array-native WCG).
+
+    Attributes:
+      w_local:  (k, m) per-graph local execution costs.
+      w_cloud:  (k, m) per-graph remote execution costs.
+      adj:      (k, m, m) symmetric per-graph communication costs.
+      pinned:   (k, m) bool — True marks unoffloadable vertices AND
+                padding (padded vertices carry zero weights/edges, so the
+                solver's anchor fold absorbs them for free).
+      n_valid:  static per-graph true vertex counts (≤ m); padding lives
+                in columns [n_valid[i], m).
+      names:    shared vertex labels of the topology ('' == anonymous).
+
+    Arrays may be numpy (host construction / pricing, float64) or JAX
+    (inside a jitted build+solve program).  The class is a registered
+    pytree whose static leaves are ``(n_valid, names)``, so it crosses
+    ``jax.jit`` boundaries; validation is skipped for traced leaves.
+    """
+
+    w_local: Any
+    w_cloud: Any
+    adj: Any
+    pinned: Any
+    n_valid: tuple[int, ...] = ()
+    names: tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        self.n_valid = tuple(int(n) for n in self.n_valid)
+        self.names = tuple(self.names)
+        if not all(hasattr(a, "shape") for a in
+                   (self.w_local, self.w_cloud, self.adj, self.pinned)):
+            return  # pytree unflatten with placeholder leaves
+        k, m = self.w_local.shape
+        if not self.n_valid:
+            self.n_valid = (m,) * k
+        if len(self.n_valid) != k or any(not 0 < n <= m for n in self.n_valid):
+            raise ValueError(f"n_valid {self.n_valid} inconsistent with (k={k}, m={m})")
+        if self.adj.shape != (k, m, m):
+            raise ValueError(f"adj must be ({k},{m},{m}), got {self.adj.shape}")
+        if self.w_cloud.shape != (k, m) or self.pinned.shape != (k, m):
+            raise ValueError("batch attribute shape mismatch")
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.n_valid)
+
+    @property
+    def k(self) -> int:
+        return len(self.n_valid)
+
+    @property
+    def m(self) -> int:
+        return int(self.w_local.shape[1])
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def pack(
+        cls,
+        w_local: np.ndarray,
+        w_cloud: np.ndarray,
+        adj: np.ndarray,
+        offloadable: np.ndarray,
+        *,
+        m: int | None = None,
+        names: Sequence[str] = (),
+        dtype=np.float64,
+    ) -> "WCGBatch":
+        """Stack already-batched ``(k, n[, n])`` arrays, zero-padding to
+        ``m`` vertices (padding is pinned with zero weights/edges)."""
+        w_local = np.asarray(w_local, dtype)
+        k, n = w_local.shape
+        m = n if m is None else int(m)
+        if m < n:
+            raise ValueError(f"pad target m={m} smaller than n={n}")
+        wl = np.zeros((k, m), dtype)
+        wc = np.zeros((k, m), dtype)
+        a = np.zeros((k, m, m), dtype)
+        pin = np.ones((k, m), dtype=bool)
+        wl[:, :n] = w_local
+        wc[:, :n] = w_cloud
+        a[:, :n, :n] = adj
+        pin[:, :n] = ~np.asarray(offloadable, dtype=bool)
+        return cls(wl, wc, a, pin, n_valid=(n,) * k, names=tuple(names))
+
+    @classmethod
+    def from_wcgs(
+        cls,
+        graphs: Sequence[WCG],
+        *,
+        m: int | None = None,
+        dtype=np.float64,
+    ) -> "WCGBatch":
+        """Pad a list of WCGs into one batch (generalized bucket packing).
+
+        Graphs may differ in size and pinned sets; ``names`` are kept only
+        when every graph shares one labelled topology.  Round-trips with
+        :meth:`to_wcgs` exactly (offloadability included).
+        """
+        graphs = list(graphs)
+        if not graphs:
+            raise ValueError("cannot batch zero graphs")
+        sizes = [g.n for g in graphs]
+        m = max(sizes) if m is None else int(m)
+        if m < max(sizes):
+            raise ValueError(f"pad target m={m} smaller than largest graph {max(sizes)}")
+        k = len(graphs)
+        wl = np.zeros((k, m), dtype)
+        wc = np.zeros((k, m), dtype)
+        a = np.zeros((k, m, m), dtype)
+        pin = np.ones((k, m), dtype=bool)
+        for i, g in enumerate(graphs):
+            n = g.n
+            wl[i, :n] = g.w_local
+            wc[i, :n] = g.w_cloud
+            a[i, :n, :n] = g.adj
+            pin[i, :n] = ~g.offloadable
+        names = tuple(graphs[0].names)
+        if any(tuple(g.names) != names for g in graphs[1:]):
+            names = ()
+        return cls(wl, wc, a, pin, n_valid=tuple(sizes), names=names)
+
+    # ------------------------------------------------------------------
+    def wcg(self, i: int) -> WCG:
+        """Materialize graph ``i`` as a plain :class:`WCG` (crops padding)."""
+        n = self.n_valid[i]
+        names = list(self.names[:n]) if len(self.names) >= n else []
+        return WCG(
+            w_local=np.array(self.w_local[i, :n], dtype=np.float64),
+            w_cloud=np.array(self.w_cloud[i, :n], dtype=np.float64),
+            adj=np.array(self.adj[i, :n, :n], dtype=np.float64),
+            offloadable=~np.asarray(self.pinned[i, :n], dtype=bool),
+            names=names,
+        )
+
+    def to_wcgs(self) -> list[WCG]:
+        return [self.wcg(i) for i in range(self.k)]
+
+    def anchored_pinned(self) -> np.ndarray:
+        """Solver-facing pinned mask: a graph with no unoffloadable vertex
+        is anchored at its vertex 0, matching ``mcop_reference`` (padding
+        alone must not steal the anchor)."""
+        pin = np.asarray(self.pinned, dtype=bool).copy()
+        for i, n in enumerate(self.n_valid):
+            if not pin[i, :n].any():
+                pin[i, 0] = True
+        return pin
+
+    def total_cost(self, local_masks: np.ndarray) -> np.ndarray:
+        """Vectorized Eq. 2 over the batch: (k,) costs for (k, m) masks.
+
+        Padding must be masked local (True); padded vertices have zero
+        weights and edges, so they never contribute.  Row i matches
+        ``self.wcg(i).total_cost(mask_i)``.
+        """
+        masks = np.asarray(local_masks, dtype=bool)
+        if masks.shape != self.w_local.shape:
+            raise ValueError("placement mask batch shape mismatch")
+        node = np.where(masks, self.w_local, self.w_cloud).sum(axis=-1)
+        cut = masks[:, :, None] != masks[:, None, :]
+        comm = (np.asarray(self.adj) * cut).sum(axis=(-2, -1)) / 2.0
+        return node + comm
+
+
+jax.tree_util.register_pytree_node(
+    WCGBatch,
+    lambda b: ((b.w_local, b.w_cloud, b.adj, b.pinned), (b.n_valid, b.names)),
+    lambda aux, ch: WCGBatch(*ch, n_valid=aux[0], names=aux[1]),
+)
 
 
 # ----------------------------------------------------------------------

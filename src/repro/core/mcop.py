@@ -42,6 +42,18 @@ Backend-selection story — when each wins:
   adjacency row reads; on CPU it falls back to interpret mode (correct
   but slow — benchmark numbers there are indicative only).
 
+* :func:`mcop_batch` also accepts a :class:`~repro.core.graph.WCGBatch`
+  directly — consumers that already hold stacked tensors (the cost
+  models' ``build_batch``, the placement tier sweep, the broker's
+  per-bucket flush) skip the per-graph Python packing entirely.
+
+* :func:`solve_envs` — the fully fused environment→placement pipeline.
+  Builds the K WCGs *and* runs Stoer–Wagner inside ONE jitted program per
+  (cost model, shape bucket): the paper's Fig.-1 re-partitioning loop
+  under a drifting environment becomes a single device dispatch with six
+  scalars per environment crossing the host boundary, instead of K
+  Python graph constructions followed by a packed solve.
+
 Padding semantics: padded vertices carry zero weights, zero edges, and
 are marked *pinned*, so the anchor fold absorbs them with no effect on
 any phase cut; graphs with no unoffloadable vertex are anchored at vertex
@@ -52,13 +64,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import OrderedDict
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import WCG
+from repro.core.graph import WCG, WCGBatch
 
 __all__ = [
     "PhaseRecord",
@@ -66,6 +79,7 @@ __all__ = [
     "mcop_reference",
     "mcop_jax",
     "mcop_batch",
+    "solve_envs",
     "mcop",
     "DEFAULT_BUCKETS",
 ]
@@ -470,8 +484,54 @@ def _pack_bucket(
     return adj, wl, wc, pinned
 
 
+def _solver_dtype(backend: str):
+    return (
+        np.float64
+        if backend == "jax" and jax.config.jax_enable_x64
+        else np.float32
+    )
+
+
+def _dispatch_arrays(adj, wl, wc, pin, backend: str, interpret: bool | None):
+    """One device dispatch over pre-packed (b, m[, m]) tensors."""
+    if backend == "jax":
+        return _mcop_jax_batch(adj, wl, wc, pin)
+    # deferred: keep core importable without pulling kernel deps
+    from repro.kernels.mcop_phase import mcop_stoer_wagner_kernel
+
+    return mcop_stoer_wagner_kernel(adj, wl, wc, pin, interpret=interpret)
+
+
+def _solve_wcg_batch(
+    batch: WCGBatch, *, backend: str, interpret: bool | None
+) -> list[MCOPResult]:
+    """Array-native entry: a WCGBatch is already one packed bucket."""
+    if backend == "reference":
+        return [mcop_reference(g) for g in batch.to_wcgs()]
+    if backend not in ("jax", "pallas"):
+        raise ValueError(f"unknown MCOP batch backend: {backend!r}")
+    dtype = _solver_dtype(backend)
+    cuts, masks = _dispatch_arrays(
+        jnp.asarray(np.asarray(batch.adj, dtype)),
+        jnp.asarray(np.asarray(batch.w_local, dtype)),
+        jnp.asarray(np.asarray(batch.w_cloud, dtype)),
+        jnp.asarray(batch.anchored_pinned()),
+        backend,
+        interpret,
+    )
+    cuts, masks = jax.device_get((cuts, masks))  # one host sync
+    return [
+        MCOPResult(
+            min_cut=float(cuts[i]),
+            local_mask=masks[i, : batch.n_valid[i]].copy(),
+            phases=[],
+        )
+        for i in range(batch.k)
+    ]
+
+
 def mcop_batch(
-    graphs: Sequence[WCG],
+    graphs: Sequence[WCG] | WCGBatch,
     *,
     backend: str = "jax",
     buckets: Sequence[int] = DEFAULT_BUCKETS,
@@ -484,17 +544,20 @@ def mcop_batch(
     solver (``backend="jax"``) or one grid-over-batch Pallas kernel call
     (``backend="pallas"``).  ``backend="reference"`` loops the numpy oracle
     (for testing/parity).  ``interpret`` only affects the Pallas backend.
+
+    A :class:`~repro.core.graph.WCGBatch` is accepted directly: its padded
+    shape *is* the bucket, so the per-graph packing (``_pack_bucket``) is
+    skipped and ``buckets`` is ignored — the array-native path for callers
+    that construct stacked tensors in the first place.
     """
+    if isinstance(graphs, WCGBatch):
+        return _solve_wcg_batch(graphs, backend=backend, interpret=interpret)
     graphs = list(graphs)
     if backend == "reference":
         return [mcop_reference(g) for g in graphs]
     if backend not in ("jax", "pallas"):
         raise ValueError(f"unknown MCOP batch backend: {backend!r}")
-    dtype = (
-        np.float64
-        if backend == "jax" and jax.config.jax_enable_x64
-        else np.float32
-    )
+    dtype = _solver_dtype(backend)
 
     by_bucket: dict[int, list[int]] = {}
     for i, g in enumerate(graphs):
@@ -505,15 +568,7 @@ def mcop_batch(
         adj, wl, wc, pin = (
             jnp.asarray(a) for a in _pack_bucket([graphs[i] for i in idxs], m, dtype)
         )
-        if backend == "jax":
-            cuts, masks = _mcop_jax_batch(adj, wl, wc, pin)
-        else:
-            # deferred: keep core importable without pulling kernel deps
-            from repro.kernels.mcop_phase import mcop_stoer_wagner_kernel
-
-            cuts, masks = mcop_stoer_wagner_kernel(
-                adj, wl, wc, pin, interpret=interpret
-            )
+        cuts, masks = _dispatch_arrays(adj, wl, wc, pin, backend, interpret)
         cuts, masks = jax.device_get((cuts, masks))  # one host sync
         for row, i in enumerate(idxs):
             results[i] = MCOPResult(
@@ -522,6 +577,109 @@ def mcop_batch(
                 phases=[],
             )
     return results  # type: ignore[return-value]
+
+
+# ======================================================================
+# Fused environment→placement pipeline: build + solve, one XLA program.
+# ======================================================================
+
+# Compiled build+solve programs, keyed on (model class, model fingerprint,
+# backend, interpret).  The fingerprint contract (see CostModel.fingerprint)
+# guarantees equal-fingerprint models price identically, so reusing the
+# first instance's closure is sound; jit itself re-specializes per input
+# shape/dtype, so the bucket size never needs to appear in the key.  LRU
+# bounded: a parametric-model sweep (e.g. many WeightedModel omegas) must
+# not accumulate compiled executables for the process lifetime.
+_FUSED_SOLVERS: OrderedDict = OrderedDict()
+_FUSED_SOLVERS_CAP = 64
+
+
+def _fused_solver(model, backend: str, interpret: bool | None):
+    key = (type(model), model.fingerprint, backend, interpret)
+    fn = _FUSED_SOLVERS.get(key)
+    if fn is not None:
+        _FUSED_SOLVERS.move_to_end(key)
+    if fn is None:
+
+        def fused(t_local, data_in, data_out, pinned, env):
+            wl, wc, adj = model.batch_weights(t_local, data_in, data_out, env)
+            pin = jnp.broadcast_to(pinned[None, :], wl.shape)
+            if backend == "jax":
+                return jax.vmap(_mcop_batch_impl)(adj, wl, wc, pin)
+            from repro.kernels.mcop_phase import mcop_stoer_wagner_kernel
+
+            return mcop_stoer_wagner_kernel(adj, wl, wc, pin, interpret=interpret)
+
+        fn = _FUSED_SOLVERS[key] = jax.jit(fused)
+        while len(_FUSED_SOLVERS) > _FUSED_SOLVERS_CAP:
+            _FUSED_SOLVERS.popitem(last=False)
+    return fn
+
+
+def solve_envs(
+    profile,
+    model,
+    envs: Sequence,
+    *,
+    backend: str = "jax",
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+    interpret: bool | None = None,
+) -> list[MCOPResult]:
+    """Fused Fig.-1 pipeline: K environments → K placements, one dispatch.
+
+    ``model.batch_weights`` (WCG construction) and the batched
+    Stoer–Wagner solver are jitted into ONE XLA program per (cost model,
+    shape bucket), so a sweep/broker tick moves only six scalars per
+    environment across the host boundary — no per-environment Python
+    ``WCG`` objects, no separate packing pass.  Placements match the
+    object path ``mcop_batch([model.build(profile, e) for e in envs])``
+    (asserted by the parity suite; note construction happens in the
+    solver dtype here, so an *exact* tie between two cuts could in
+    principle resolve differently than the build-f64-then-cast object
+    path — equal-cost placements either way).  ``backend="reference"``
+    routes the vectorized host build through the numpy oracle for
+    exact-parity testing.  ``interpret`` only affects the Pallas backend.
+    """
+    from repro.core.cost_models import EnvArrays  # deferred: no import cycle
+
+    envs = list(envs)
+    if not envs:
+        return []
+    if backend == "reference":
+        return [mcop_reference(g) for g in model.build_batch(profile, envs).to_wcgs()]
+    if backend not in ("jax", "pallas"):
+        raise ValueError(f"unknown MCOP batch backend: {backend!r}")
+    dtype = _solver_dtype(backend)
+    n = profile.n
+    m = _bucket_size(n, buckets)
+
+    # Environment-independent profile tensors, zero-padded to the bucket;
+    # padding is pinned and a pin-free profile anchors at vertex 0 (the
+    # same convention _pack_bucket applies per graph).
+    t_local = np.zeros(m, dtype)
+    data_in = np.zeros((m, m), dtype)
+    data_out = np.zeros((m, m), dtype)
+    pinned = np.ones(m, dtype=bool)
+    t_local[:n] = profile.t_local
+    data_in[:n, :n] = profile.data_in
+    data_out[:n, :n] = profile.data_out
+    pinned[:n] = ~profile.offloadable
+    if not pinned[:n].any():
+        pinned[0] = True
+
+    fn = _fused_solver(model, backend, interpret)
+    cuts, masks = fn(
+        jnp.asarray(t_local),
+        jnp.asarray(data_in),
+        jnp.asarray(data_out),
+        jnp.asarray(pinned),
+        EnvArrays.from_envs(envs, dtype),
+    )
+    cuts, masks = jax.device_get((cuts, masks))  # one host sync
+    return [
+        MCOPResult(min_cut=float(cuts[i]), local_mask=masks[i, :n].copy(), phases=[])
+        for i in range(len(envs))
+    ]
 
 
 def mcop(g: WCG, *, backend: str = "reference") -> MCOPResult:

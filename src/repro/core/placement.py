@@ -33,8 +33,8 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import baselines
-from repro.core.graph import WCG
-from repro.core.mcop import MCOPResult, mcop, mcop_batch
+from repro.core.graph import WCG, WCGBatch
+from repro.core.mcop import DEFAULT_BUCKETS, MCOPResult, _bucket_size, mcop, mcop_batch
 
 __all__ = [
     "TierSpec",
@@ -244,20 +244,33 @@ def plan_placement_batch(
     """Tier sweep: one plan per inter-tier bandwidth, solved in ONE batch.
 
     The elastic/adaptive loops re-plan as link conditions change; sweeping
-    candidate bandwidths (or forecast bands) through ``mcop_batch`` costs
-    one device dispatch for the whole sweep instead of one trace per
-    point.  Results match calling :func:`plan_placement` per bandwidth.
+    candidate bandwidths (or forecast bands) costs one device dispatch for
+    the whole sweep instead of one trace per point.  Array-native: the
+    stage graph is rooflined ONCE (node weights don't depend on the link),
+    the K adjacencies are a single broadcast edge rescale (Eq. 1: edges
+    are ``bytes/B``), and the stacked :class:`~repro.core.graph.WCGBatch`
+    goes straight into :func:`mcop_batch` — no per-bandwidth Python graph
+    construction.  Results match calling :func:`plan_placement` per
+    bandwidth.
     """
     # same None/0 fallback plan_placement applies, so results really match
     bws = [
         bw or min(tier_local.link_bw, tier_remote.link_bw) for bw in inter_tier_bws
     ]
-    gs = [
-        build_stage_wcg(stages, tier_local, tier_remote, inter_tier_bw=bw)
-        for bw in bws
-    ]
-    results = mcop_batch(gs, backend=backend)
-    return [
-        _finalize_plan(g, baselines.clamp_no_offloading(g, r), bw)
-        for g, r, bw in zip(gs, results, bws)
-    ]
+    base = build_stage_wcg(stages, tier_local, tier_remote, inter_tier_bw=1.0)
+    k, n = len(bws), base.n
+    scale = np.asarray(bws, dtype=np.float64)
+    batch = WCGBatch.pack(
+        np.broadcast_to(base.w_local, (k, n)),
+        np.broadcast_to(base.w_cloud, (k, n)),
+        base.adj[None] / scale[:, None, None],
+        np.broadcast_to(base.offloadable, (k, n)),
+        m=_bucket_size(n, DEFAULT_BUCKETS),
+        names=base.names,
+    )
+    results = mcop_batch(batch, backend=backend)
+    plans = []
+    for i, (r, bw) in enumerate(zip(results, bws)):
+        g = batch.wcg(i)
+        plans.append(_finalize_plan(g, baselines.clamp_no_offloading(g, r), bw))
+    return plans

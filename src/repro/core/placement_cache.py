@@ -38,7 +38,9 @@ import dataclasses
 import hashlib
 import json
 import math
+import os
 import pathlib
+import tempfile
 from collections import OrderedDict
 from typing import Tuple
 
@@ -237,9 +239,28 @@ class PlacementCache:
         }
 
     def save(self, path, *, fingerprint: str | None = None) -> None:
-        pathlib.Path(path).write_text(
-            json.dumps(self.snapshot(fingerprint=fingerprint)) + "\n"
+        """Atomically write the snapshot to ``path``.
+
+        The document is serialized to a temporary file in the same
+        directory and ``os.replace``d over the target, so a crash (or a
+        concurrent reader) can never observe a truncated snapshot —
+        :meth:`load`'s guards then only ever see whole files.
+        """
+        path = pathlib.Path(path)
+        payload = json.dumps(self.snapshot(fingerprint=fingerprint)) + "\n"
+        fd, tmp = tempfile.mkstemp(
+            dir=path.parent or ".", prefix=f".{path.name}.", suffix=".tmp"
         )
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(payload)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     def load(
         self,

@@ -250,7 +250,9 @@ class ElasticMeshManager:
                 self.tier_local.total_hbm_bw, self.tier_remote.total_hbm_bw
             ),
         )
-        future = broker.submit_graph(tenant, g, bin_env)
+        # elastic events ride the broker's priority lane: a fleet resize
+        # re-places before user refreshes drained in the same tick
+        future = broker.submit_graph(tenant, g, bin_env, lane="elastic")
         self._resize_serial += 1
         return PendingElasticEvent(
             manager=self,

@@ -26,6 +26,19 @@ service:
   ``mcop_batch`` call per static shape bucket.  Followers and hits are
   repriced under their *exact* request graph (same honesty contract as
   the controller), so a tick costs O(distinct bins), not O(requests).
+* **Array-native flush** — :meth:`submit` no longer builds a WCG per
+  request: construction is deferred to the tick, where each tenant's
+  pending environments are built in ONE vectorized
+  ``cost_model.build_batch`` call (rows bit-identical to the scalar
+  builder), and each bucket's representatives are packed into a
+  :class:`~repro.core.graph.WCGBatch` that ``mcop_batch`` dispatches
+  directly — no per-request Python graph objects on the hot path.
+* **Priority lanes** — elastic resize events
+  (:meth:`~repro.runtime.elastic.ElasticMeshManager.submit_resize`,
+  ``lane="elastic"``) flush ahead of user-session refreshes within a
+  tick: a shrinking fleet must re-place before any user refresh is
+  served a placement solved for capacity that no longer exists.  Lane
+  occupancy is telemetered per tick (:attr:`TickReport.elastic`).
 * **Persistence** — tenant caches snapshot/load as JSON
   (:meth:`OffloadBroker.snapshot` / ``warm_start=`` on
   :meth:`OffloadBroker.register`), so a serving restart replays a known
@@ -44,7 +57,7 @@ from typing import Callable, Sequence
 
 from repro.core import baselines
 from repro.core.cost_models import AppProfile, CostModel, Environment
-from repro.core.graph import WCG
+from repro.core.graph import WCG, WCGBatch
 from repro.core.mcop import DEFAULT_BUCKETS, MCOPResult, _bucket_size, mcop_batch
 from repro.core.placement_cache import (
     EnvQuantizer,
@@ -122,6 +135,7 @@ class TickReport:
     dispatches: int         # mcop_batch calls (≤ one per shape bucket)
     buckets: tuple[int, ...]  # bucket sizes dispatched this tick
     latency_s: float        # wall time of the tick under the broker clock
+    elastic: int = 0        # priority-lane occupancy: elastic events drained
 
 
 @dataclasses.dataclass
@@ -134,6 +148,7 @@ class BrokerTelemetry:
     coalesced: int = 0
     solved: int = 0
     dispatches: int = 0
+    elastic_requests: int = 0
     max_queue_depth: int = 0
     total_latency_s: float = 0.0
     reports: list[TickReport] = dataclasses.field(default_factory=list)
@@ -146,6 +161,7 @@ class BrokerTelemetry:
         self.coalesced += report.coalesced
         self.solved += report.solved
         self.dispatches += report.dispatches
+        self.elastic_requests += report.elastic
         self.max_queue_depth = max(self.max_queue_depth, report.queue_depth)
         self.total_latency_s += report.latency_s
         self.reports.append(report)
@@ -172,6 +188,7 @@ class BrokerTelemetry:
             "coalesced": self.coalesced,
             "solved": self.solved,
             "dispatches": self.dispatches,
+            "elastic_requests": self.elastic_requests,
             "max_queue_depth": self.max_queue_depth,
             "coalesce_ratio": round(self.coalesce_ratio, 4),
             "hit_rate": round(self.hit_rate, 4),
@@ -188,12 +205,19 @@ class _Tenant:
     fingerprint: str | None
 
 
+# Priority lanes, lowest flushes first.  Elastic fleet events re-place
+# before user-session refreshes are served within the same tick.
+_LANE_ORDER = {"elastic": 0, "user": 1}
+
+
 @dataclasses.dataclass
 class _Request:
     tenant: _Tenant
-    g: WCG
+    g: WCG | None               # None = deferred: built at tick time from env
     key: tuple[int, ...]
     future: PlacementFuture
+    env: Environment | None = None
+    lane: str = "user"
 
 
 class OffloadBroker:
@@ -280,21 +304,36 @@ class OffloadBroker:
         t.cache.save(path, fingerprint=t.fingerprint)
 
     # -- submission ------------------------------------------------------
-    def submit(self, name: str, env: Environment) -> PlacementFuture:
-        """Enqueue a solve for ``env`` under the tenant's cost model."""
+    def submit(
+        self, name: str, env: Environment, *, lane: str = "user"
+    ) -> PlacementFuture:
+        """Enqueue a solve for ``env`` under the tenant's cost model.
+
+        Construction is deferred: the WCG is built at the next tick, where
+        all of this tenant's pending environments go through ONE vectorized
+        ``cost_model.build_batch`` call instead of a Python build per
+        request.
+        """
         t = self._tenants[name]
         if t.profile is None:
             raise ValueError(
                 f"tenant {name!r} has no profile; use submit_graph()"
             )
-        g = t.cost_model.build(t.profile, env)
-        return self.submit_graph(name, g, env)
+        future = PlacementFuture()
+        self._queue.append(
+            _Request(t, None, t.cache.key(env), future, env=env, lane=lane)
+        )
+        return future
 
-    def submit_graph(self, name: str, g: WCG, env: Environment) -> PlacementFuture:
+    def submit_graph(
+        self, name: str, g: WCG, env: Environment, *, lane: str = "user"
+    ) -> PlacementFuture:
         """Enqueue a caller-built WCG; ``env`` only determines the bin key."""
         t = self._tenants[name]
         future = PlacementFuture()
-        self._queue.append(_Request(t, g, t.cache.key(env), future))
+        self._queue.append(
+            _Request(t, g, t.cache.key(env), future, env=env, lane=lane)
+        )
         return future
 
     @property
@@ -303,12 +342,14 @@ class OffloadBroker:
 
     # -- the tick --------------------------------------------------------
     def tick(self) -> TickReport:
-        """Drain the queue: hits → followers → one dispatch per bucket.
+        """Drain the queue: lanes → hits → followers → bucket dispatches.
 
-        Requests are processed in FIFO order, so cache counters and
+        Elastic-lane requests are flushed ahead of user-lane requests;
+        within a lane, FIFO order is preserved, so cache counters and
         placements are bit-identical to N serial controllers sharing one
         cache and observing in submission order (asserted by the
-        broker↔serial parity tests).
+        broker↔serial parity tests).  Deferred (env-only) submissions are
+        materialized here, one vectorized cost-model build per tenant.
 
         Failure containment: if a solve dispatch raises (transient
         device/XLA error), every request whose future is still unresolved
@@ -320,13 +361,34 @@ class OffloadBroker:
         self._tick += 1
         requests = list(self._queue)
         self._queue.clear()
+        requests.sort(key=lambda r: _LANE_ORDER.get(r.lane, 1))  # stable
         try:
+            # materialization is inside the containment: a failing deferred
+            # build (bad environment) must re-queue innocents, not drop them
+            self._materialize(requests)
             return self._run_tick(requests, t0)
         except BaseException:
             self._queue.extendleft(
                 r for r in reversed(requests) if not r.future.done
             )
             raise
+
+    def _materialize(self, requests: list[_Request]) -> None:
+        """Build deferred WCGs: one ``build_batch`` per tenant per tick.
+
+        Rows of the vectorized build are bit-identical to the scalar
+        ``cost_model.build`` (same code path, batch of K), so deferral
+        never changes a placement or a reported cost.
+        """
+        deferred: dict[str, list[_Request]] = {}
+        for r in requests:
+            if r.g is None:
+                deferred.setdefault(r.tenant.name, []).append(r)
+        for name, rs in deferred.items():
+            t = self._tenants[name]
+            batch = t.cost_model.build_batch(t.profile, [r.env for r in rs])
+            for i, r in enumerate(rs):
+                r.g = batch.wcg(i)
 
     def _run_tick(self, requests: list[_Request], t0: float) -> TickReport:
         depth = len(requests)
@@ -359,7 +421,9 @@ class OffloadBroker:
             rep_slot[slot_key] = len(solves)
             solves.append(r)
 
-        # one mcop_batch call per static shape bucket, shared across tenants
+        # one mcop_batch call per static shape bucket, shared across
+        # tenants; each bucket is packed into a WCGBatch once, so the
+        # dispatch skips the per-graph packing pass
         by_bucket: dict[int, list[int]] = {}
         for i, r in enumerate(solves):
             by_bucket.setdefault(_bucket_size(r.g.n, self.buckets), []).append(i)
@@ -367,7 +431,9 @@ class OffloadBroker:
         dispatches = 0
         for m, idxs in sorted(by_bucket.items()):
             batch = mcop_batch(
-                [solves[i].g for i in idxs], backend=self.backend, buckets=(m,)
+                WCGBatch.from_wcgs([solves[i].g for i in idxs], m=m),
+                backend=self.backend,
+                buckets=(m,),
             )
             dispatches += 1
             for i, res in zip(idxs, batch):
@@ -408,6 +474,7 @@ class OffloadBroker:
             dispatches=dispatches,
             buckets=tuple(sorted(by_bucket)),
             latency_s=self.clock() - t0,
+            elastic=sum(r.lane == "elastic" for r in requests),
         )
         self.telemetry.record(report)
         return report

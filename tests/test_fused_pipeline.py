@@ -1,0 +1,326 @@
+"""Array-native environment→placement pipeline: WCGBatch, batch-first
+cost models, the fused ``solve_envs`` program, broker priority lanes and
+atomic snapshot writes.
+
+The parity suite is the acceptance gate for the fusion refactor:
+``solve_envs`` must return bit-identical placements to the object path
+(per-environment ``cost_model.build`` + ``mcop_batch``) across all
+Fig.-2 topologies × all three cost models.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st  # hypothesis or skip-shim (see _hyp.py)
+
+from repro.core import (
+    AppProfile,
+    EnergyModel,
+    Environment,
+    PlacementCache,
+    ResponseTimeModel,
+    WCGBatch,
+    WeightedModel,
+    linear_graph,
+    loop_graph,
+    mcop_batch,
+    mcop_reference,
+    mesh_graph,
+    random_wcg,
+    solve_envs,
+    tree_graph,
+)
+
+FIG2_TOPOLOGIES = {
+    "linear": lambda: linear_graph(9, rng=np.random.default_rng(1)),
+    "loop": lambda: loop_graph(8, rng=np.random.default_rng(2)),
+    "tree": lambda: tree_graph(10, rng=np.random.default_rng(3)),
+    "mesh": lambda: mesh_graph(3, 3, rng=np.random.default_rng(4)),
+}
+
+MODELS = {
+    "time": ResponseTimeModel,
+    "energy": EnergyModel,
+    "weighted": lambda: WeightedModel(0.35),
+}
+
+
+def _envs(k: int = 7) -> list[Environment]:
+    bands = np.geomspace(0.2, 20.0, k)
+    return [
+        Environment.symmetric(float(b), 1.5 + (i % 3)) for i, b in enumerate(bands)
+    ]
+
+
+# ----------------------------------------------------------------------
+# Tentpole parity: solve_envs ≡ object path, all topologies × models
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topology", sorted(FIG2_TOPOLOGIES))
+@pytest.mark.parametrize("model_name", sorted(MODELS))
+def test_solve_envs_matches_object_path(topology, model_name):
+    profile = AppProfile.from_wcg_times(FIG2_TOPOLOGIES[topology]())
+    model = MODELS[model_name]()
+    envs = _envs()
+    fused = solve_envs(profile, model, envs, backend="jax")
+    object_path = mcop_batch(
+        [model.build(profile, e) for e in envs], backend="jax"
+    )
+    reference = [mcop_reference(model.build(profile, e)) for e in envs]
+    for f, o, r, env in zip(fused, object_path, reference, envs):
+        assert (f.local_mask == o.local_mask).all(), (topology, model_name, env)
+        assert (f.local_mask == r.local_mask).all()
+        assert f.min_cut == pytest.approx(o.min_cut, rel=1e-4)
+        # the fused cut is the true Eq.-2 cost of the fused placement
+        g = model.build(profile, env)
+        assert f.min_cut == pytest.approx(g.total_cost(f.local_mask), rel=1e-4)
+
+
+def test_solve_envs_reference_backend_is_exact():
+    profile = AppProfile.from_wcg_times(FIG2_TOPOLOGIES["tree"]())
+    model = ResponseTimeModel()
+    envs = _envs(5)
+    for f, env in zip(solve_envs(profile, model, envs, backend="reference"), envs):
+        r = mcop_reference(model.build(profile, env))
+        assert f.min_cut == r.min_cut and (f.local_mask == r.local_mask).all()
+
+
+def test_solve_envs_pallas_backend_matches_reference():
+    g = random_wcg(7, edge_prob=0.4, rng=np.random.default_rng(11))
+    profile = AppProfile.from_wcg_times(g)
+    model = ResponseTimeModel()
+    envs = _envs(3)
+    fused = solve_envs(profile, model, envs, backend="pallas", buckets=(8,))
+    for f, env in zip(fused, envs):
+        r = mcop_reference(model.build(profile, env))
+        assert (f.local_mask == r.local_mask).all()
+        assert f.min_cut == pytest.approx(r.min_cut, rel=1e-4)
+
+
+def test_solve_envs_empty_and_bad_backend():
+    profile = AppProfile.from_wcg_times(FIG2_TOPOLOGIES["linear"]())
+    assert solve_envs(profile, ResponseTimeModel(), []) == []
+    with pytest.raises(ValueError):
+        solve_envs(profile, ResponseTimeModel(), _envs(2), backend="cuda")
+
+
+def test_scalar_build_is_batch_of_one():
+    """The object API survives as a thin wrapper: build() rows equal
+    build_batch() rows bit-for-bit."""
+    profile = AppProfile.from_wcg_times(FIG2_TOPOLOGIES["mesh"]())
+    envs = _envs(4)
+    for model_name in sorted(MODELS):
+        model = MODELS[model_name]()
+        batch = model.build_batch(profile, envs)
+        for i, env in enumerate(envs):
+            g = model.build(profile, env)
+            row = batch.wcg(i)
+            assert (g.w_local == row.w_local).all()
+            assert (g.w_cloud == row.w_cloud).all()
+            assert (g.adj == row.adj).all()
+            assert (g.offloadable == row.offloadable).all()
+            assert g.names == row.names
+
+
+# ----------------------------------------------------------------------
+# WCGBatch: packing, direct mcop_batch dispatch, vectorized pricing
+# ----------------------------------------------------------------------
+
+
+def _mixed_graphs():
+    gs = [
+        random_wcg(
+            int(rng.integers(2, 13)),
+            edge_prob=0.4,
+            n_unoffloadable=int(rng.integers(0, 3)),
+            rng=rng,
+        )
+        for rng in (np.random.default_rng(s) for s in range(6))
+    ]
+    gs[0].offloadable[:] = True  # anchor-fallback row
+    return gs
+
+
+def test_wcgbatch_roundtrip_smoke():
+    """Fixed-seed numpy fallback of the hypothesis property below."""
+    gs = _mixed_graphs()
+    batch = WCGBatch.from_wcgs(gs, m=16)
+    assert len(batch) == len(gs) and batch.m == 16
+    for g, g2 in zip(gs, batch.to_wcgs()):
+        assert (g.w_local == g2.w_local).all()
+        assert (g.w_cloud == g2.w_cloud).all()
+        assert (g.adj == g2.adj).all()
+        assert (g.offloadable == g2.offloadable).all()
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 14))
+@settings(max_examples=25, deadline=None)
+def test_wcgbatch_roundtrip_property(seed, n):
+    """WCG ↔ WCGBatch round-trips exactly, padding and pinning included."""
+    rng = np.random.default_rng(seed)
+    g = random_wcg(
+        n,
+        edge_prob=float(rng.uniform(0.1, 0.8)),
+        n_unoffloadable=int(rng.integers(0, n)),
+        rng=rng,
+    )
+    if rng.integers(2):
+        g.offloadable[:] = True
+    batch = WCGBatch.from_wcgs([g], m=16)
+    g2 = batch.wcg(0)
+    assert (g.w_local == g2.w_local).all()
+    assert (g.w_cloud == g2.w_cloud).all()
+    assert (g.adj == g2.adj).all()
+    assert (g.offloadable == g2.offloadable).all()
+    # anchored pinning never leaks back into the round-tripped graph but
+    # guarantees the solver an anchor on every row
+    pin = batch.anchored_pinned()
+    assert pin[0, : g.n].any()
+
+
+def test_mcop_batch_accepts_wcgbatch_directly():
+    gs = _mixed_graphs()
+    direct = mcop_batch(WCGBatch.from_wcgs(gs, m=16))
+    packed = mcop_batch(gs, buckets=(16,))
+    for a, b, g in zip(direct, packed, gs):
+        assert a.min_cut == b.min_cut
+        assert (a.local_mask == b.local_mask).all()
+        assert a.local_mask.shape == (g.n,)
+    with pytest.raises(ValueError):
+        mcop_batch(WCGBatch.from_wcgs(gs), backend="cuda")
+
+
+def test_wcgbatch_total_cost_matches_scalar():
+    gs = _mixed_graphs()
+    batch = WCGBatch.from_wcgs(gs, m=16)
+    masks = np.ones((len(gs), 16), dtype=bool)
+    rng = np.random.default_rng(7)
+    for i, g in enumerate(gs):
+        masks[i, : g.n] = rng.integers(0, 2, g.n).astype(bool) | ~g.offloadable
+    costs = batch.total_cost(masks)
+    for i, g in enumerate(gs):
+        assert costs[i] == pytest.approx(g.total_cost(masks[i, : g.n]), rel=1e-12)
+
+
+def test_wcgbatch_shape_validation():
+    g = random_wcg(5, rng=np.random.default_rng(0))
+    with pytest.raises(ValueError):
+        WCGBatch.from_wcgs([])
+    with pytest.raises(ValueError):
+        WCGBatch.from_wcgs([g], m=3)  # pad target below graph size
+    batch = WCGBatch.from_wcgs([g])
+    with pytest.raises(ValueError):
+        batch.total_cost(np.ones((2, 5), bool))
+
+
+# ----------------------------------------------------------------------
+# Broker priority lanes (elastic ahead of user within a tick)
+# ----------------------------------------------------------------------
+
+
+def test_broker_elastic_lane_flushes_first(monkeypatch):
+    from repro.service import OffloadBroker
+    from repro.service import broker as broker_mod
+
+    dispatched = []
+    real = broker_mod.mcop_batch
+
+    def spy(graphs, **kw):
+        dispatched.append(graphs)
+        return real(graphs, **kw)
+
+    monkeypatch.setattr(broker_mod, "mcop_batch", spy)
+
+    broker = OffloadBroker(backend="reference", clock=lambda: 0.0)
+    broker.register("fleet")
+    env = Environment.symmetric(4.0, 3.0)
+    g_user = random_wcg(8, rng=np.random.default_rng(0))
+    g_elastic = random_wcg(8, rng=np.random.default_rng(1))
+    # user submits FIRST; same tenant/bin/size so the pair coalesces —
+    # the lane decides which request becomes the representative solve
+    f_user = broker.submit_graph("fleet", g_user, env)
+    f_el = broker.submit_graph("fleet", g_elastic, env, lane="elastic")
+    report = broker.tick()
+    assert report.elastic == 1
+    assert report.solved == 1 and report.coalesced == 1
+    assert broker.telemetry.elastic_requests == 1
+    assert "elastic_requests" in broker.telemetry.summary()
+    (batch,) = dispatched
+    assert len(batch) == 1
+    assert (batch.wcg(0).adj == g_elastic.adj).all()   # elastic won the lane
+    assert not f_el.result.coalesced and f_user.result.coalesced
+
+
+def test_broker_deferred_build_failure_requeues_everything():
+    """A failing deferred build (bad environment) must honor the tick's
+    containment contract: no future resolves, nothing is dropped."""
+    from repro.service import OffloadBroker
+
+    broker = OffloadBroker(backend="reference", clock=lambda: 0.0)
+    profile = AppProfile.from_wcg_times(FIG2_TOPOLOGIES["linear"]())
+    broker.register("app", profile, ResponseTimeModel())
+    broker.register("raw")
+    # negative bandwidth → negative edge weights → WCG validation raises
+    bad = broker.submit("app", Environment.symmetric(-1.0, 3.0))
+    ok = broker.submit_graph(
+        "raw",
+        random_wcg(6, rng=np.random.default_rng(3)),
+        Environment.symmetric(2.0, 3.0),
+    )
+    with pytest.raises(ValueError, match="non-negative"):
+        broker.tick()
+    assert not bad.done and not ok.done
+    assert broker.pending == 2  # both re-queued, neither stranded
+
+
+def test_submit_resize_rides_elastic_lane():
+    from repro.core.placement import TPUV5E_TIER
+    from repro.profilers.program import stage_specs
+    from repro.configs import ARCHITECTURES, SHAPES
+    from repro.runtime import ElasticMeshManager
+    from repro.service import OffloadBroker
+
+    stages = stage_specs(ARCHITECTURES["qwen2-7b"], SHAPES["train_4k"], group=8)
+    mgr = ElasticMeshManager(stages, TPUV5E_TIER, TPUV5E_TIER)
+    broker = OffloadBroker(backend="reference", clock=lambda: 0.0)
+    broker.register("fleet")
+    pending = mgr.submit_resize(broker, "fleet", step=1, remote_chips=16)
+    report = broker.tick()
+    assert report.elastic == 1
+    pending.resolve()
+
+
+# ----------------------------------------------------------------------
+# Atomic snapshot writes
+# ----------------------------------------------------------------------
+
+
+def test_cache_save_is_atomic(tmp_path, monkeypatch):
+    cache = PlacementCache()
+    cache.put(Environment.symmetric(5.0, 3.0), np.array([True, False, True]))
+    path = tmp_path / "snap.json"
+    cache.save(path, fingerprint="fp")
+    good = path.read_text()
+    assert json.loads(good)["fingerprint"] == "fp"
+    assert list(tmp_path.iterdir()) == [path]  # no temp litter on success
+
+    # a crash mid-replace must leave the previous snapshot intact and
+    # clean up the temporary file
+    def boom(src, dst):
+        raise OSError("simulated crash")
+
+    monkeypatch.setattr(os, "replace", boom)
+    cache.put(Environment.symmetric(1.0, 3.0), np.array([False, True, False]))
+    with pytest.raises(OSError, match="simulated"):
+        cache.save(path, fingerprint="fp")
+    assert path.read_text() == good
+    assert list(tmp_path.iterdir()) == [path]
+
+    monkeypatch.undo()
+    cache.save(path, fingerprint="fp")
+    warm = PlacementCache.from_snapshot(path, fingerprint="fp")
+    assert len(warm) == 2
