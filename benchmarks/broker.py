@@ -9,6 +9,11 @@ replays the identical traces against a broker warm-started from the
 first broker's cache snapshot — the serving-restart path, which must
 reach zero dispatches.
 
+A third pass measures the weighted-fair scheduler: two tenants with a
+3:1 weight split submit identical load through budgeted ticks, and the
+derived column reports the first-tick share split plus backpressure
+rejections — the multi-tenant fairness numbers a deployment would watch.
+
 Rows are appended to ``BENCH_broker.json`` by ``benchmarks/run.py`` (a
 bounded trajectory, like ``BENCH_mcop.json`` for the solver backends)
 and smoke-checked after each run.
@@ -18,7 +23,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import AppProfile, ResponseTimeModel, face_recognition_graph
+from repro.core import AppProfile, Environment, ResponseTimeModel, face_recognition_graph
 from repro.service import OffloadBroker, run_workload, user_traces
 
 
@@ -71,4 +76,37 @@ def run() -> list[dict]:
                 " vs cold",
             }
         )
+    rows.append(_wfq_row(profile))
     return rows
+
+
+def _wfq_row(profile: AppProfile) -> dict:
+    """Weighted-fair scheduling under mixed two-tenant load.
+
+    Both tenants submit the same 24-bin sweep; budgeted ticks (8
+    requests each) drain them 3:1 until the queues empty, with a
+    64-bin backpressure cap armed.
+    """
+    broker = OffloadBroker(backend="jax", max_queued_bins=64)
+    broker.register("heavy", profile, ResponseTimeModel(), weight=3.0)
+    broker.register("light", profile, ResponseTimeModel(), weight=1.0)
+    envs = [Environment.symmetric(0.25 * (1.3 ** i), 3.0) for i in range(24)]
+    t0 = time.perf_counter()
+    for env in envs:
+        broker.submit("heavy", env)
+        broker.submit("light", env)
+    ticks = 0
+    while broker.pending:
+        broker.tick(budget=8)
+        ticks += 1
+    elapsed = time.perf_counter() - t0
+    tel = broker.telemetry
+    requests = max(tel.requests, 1)
+    first = dict(tel.reports[0].shares) if tel.reports else {}
+    return {
+        "name": "broker/wfq_2tenants_b8",
+        "us_per_call": elapsed / requests * 1e6,
+        "derived": f"{ticks} budgeted ticks; first-tick split "
+        f"heavy:light={first.get('heavy', 0)}:{first.get('light', 0)} (weights 3:1);"
+        f" rejected={tel.rejected_requests}",
+    }

@@ -1,4 +1,5 @@
-"""Fused environment→placement pipeline vs the object path.
+"""Fused environment→placement pipeline vs the object path, and the
+fused pricing/telemetry side vs the scalar ``_emit`` path.
 
 The paper's Fig.-1 loop re-partitions whenever the environment drifts;
 serving-scale sweeps (adaptive controllers, broker ticks, bandwidth
@@ -14,10 +15,18 @@ Two ways to do that:
 
 Both produce identical placements (asserted here on every run); the
 difference is pure host-side construction/packing overhead, which is
-exactly what dominates once the solve itself is a single dispatch.  Rows
-are appended to ``BENCH_pipeline.json`` by ``benchmarks/run.py`` and the
-fused/object ratio at K=64 is the acceptance number for the array-native
-pipeline (target ≥2×).
+exactly what dominates once the solve itself is a single dispatch.
+
+The **pricing** series measure the telemetry side of the same sweep:
+every event needs the current placement's cost plus the §7.1
+no-offload/full-offload baselines.  The scalar path (what
+``AdaptiveController._emit`` did before the pricing fusion) materializes
+one WCG per environment and runs three ``total_cost``-class evaluations
+each; the fused path (``core.pricing.price_trace``) prices the whole
+trace in one vectorized evaluation — with *bit-identical* numbers,
+asserted on every run.  The fused/scalar ratio at K=64 is the acceptance
+number for the pricing fusion (target ≥2×); all rows are appended to
+``BENCH_pipeline.json`` by ``benchmarks/run.py``.
 """
 
 from __future__ import annotations
@@ -31,8 +40,11 @@ from repro.core import (
     Environment,
     ResponseTimeModel,
     WeightedModel,
+    baselines,
     face_recognition_graph,
     mcop_batch,
+    offloading_gain,
+    price_trace,
     solve_envs,
 )
 
@@ -102,4 +114,57 @@ def run() -> list[dict]:
                 f" ({t_obj / k * 1e6:.0f} us/env object); placements identical",
             }
         )
+    rows.extend(_pricing_rows(profile))
     return rows
+
+
+def _pricing_rows(profile: AppProfile, k: int = 64, reps: int = 7) -> list[dict]:
+    """Sweep telemetry: fused ``price_trace`` vs the scalar ``_emit`` path.
+
+    The placements priced are the sweep's own solutions, so the workload
+    is exactly what ``AdaptiveController.sweep`` pays per trace; the
+    scalar loop reproduces the pre-fusion pass 3 (materialize one WCG
+    per environment + three scalar evaluations + the gain).
+    """
+    model = ResponseTimeModel()
+    envs = _env_sweep(k)
+    placements = solve_envs(profile, model, envs, backend="jax")
+    masks = [r.local_mask for r in placements]
+    batch = model.build_batch(profile, envs)
+
+    def scalar_emit():
+        out = []
+        for i in range(k):
+            g = batch.wcg(i)
+            partial = g.total_cost(masks[i])
+            no_off = baselines.no_offloading(g).cost
+            full = baselines.full_offloading(g).cost
+            out.append((partial, no_off, full, offloading_gain(no_off, partial)))
+        return out
+
+    def fused_pricing():
+        return price_trace(profile, model, list(zip(envs, masks)))
+
+    scalar = scalar_emit()
+    report = fused_pricing()
+    for i, (partial, no_off, full, gain) in enumerate(scalar):
+        assert report.row(i) == (partial, no_off, full, gain), (
+            "fused pricing diverged from the scalar _emit path"
+        )
+
+    t_scalar = _time(scalar_emit, reps)
+    t_fused = _time(fused_pricing, reps)
+    speedup = t_scalar / t_fused
+    return [
+        {
+            "name": f"pipeline/pricing_scalar_k{k}",
+            "us_per_call": t_scalar / k * 1e6,
+            "derived": f"{k} x (wcg materialize + 3 scalar evals + gain)",
+        },
+        {
+            "name": f"pipeline/pricing_fused_k{k}",
+            "us_per_call": t_fused / k * 1e6,
+            "derived": f"{speedup:.1f}x vs scalar _emit path"
+            f" ({t_scalar / k * 1e6:.0f} us/env scalar); numbers bit-identical",
+        },
+    ]

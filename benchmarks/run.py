@@ -117,6 +117,14 @@ def _smoke_check_trajectory(path: pathlib.Path, benchmark: str) -> None:
         if not {"name", "us_per_call", "derived"} <= set(row):
             raise RuntimeError(f"{path.name}: malformed row {row!r}")
         float(row["us_per_call"])  # numeric or raise
+    if benchmark == "pipeline":
+        # the pricing fusion must keep reporting its series: a sweep's
+        # telemetry speedup is an acceptance number, not a nice-to-have
+        names = [row["name"] for row in last["rows"]]
+        if not any(n.startswith("pipeline/pricing_fused") for n in names):
+            raise RuntimeError(
+                f"{path.name}: last run lacks a pipeline/pricing_fused_* row"
+            )
 
 
 def main(argv=None) -> int:

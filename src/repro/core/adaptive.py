@@ -38,7 +38,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core import baselines
+from repro.core import baselines, pricing
 from repro.core.cost_models import AppProfile, CostModel, Environment, offloading_gain
 from repro.core.graph import WCG
 from repro.core.mcop import MCOPResult, mcop, solve_envs
@@ -136,6 +136,29 @@ class AdaptiveController:
         """Paper §4.3: only partition when beneficial (shared clamp)."""
         return baselines.clamp_no_offloading(g, candidate)
 
+    # -- decision-state checkpointing (shared with BrokerSession) ------
+    def checkpoint_decision(self) -> tuple:
+        """Snapshot the drift/cooldown decision state before a step.
+
+        Pair with :meth:`rollback_decision` when the solve that
+        :meth:`begin_step` scheduled never lands (solver failure,
+        broker backpressure rejection) — used by :meth:`observe`'s own
+        containment and by ``BrokerSession``.
+        """
+        return (self.drift._anchor, self._steps_since, self._has_partition)
+
+    def rollback_decision(self, state: tuple) -> None:
+        """Undo :meth:`begin_step`'s decision effects after a failed step.
+
+        The step still happened (the clock advanced; the cooldown counts
+        it) but no partition was installed, so the next observation
+        retries instead of serving a placement that never arrived.
+        """
+        anchor, steps_since, had_partition = state
+        self.drift._anchor = anchor
+        self._steps_since = steps_since + 1
+        self._has_partition = had_partition
+
     def _reprice(self, g: WCG, mask: np.ndarray) -> MCOPResult:
         """A cached mask is re-priced at the exact current WCG and clamped
         (shared with the broker via :func:`baselines.reprice_clamped`) —
@@ -150,18 +173,32 @@ class AdaptiveController:
 
     def _emit(
         self,
-        g: WCG,
+        g: WCG | None,
         env: Environment,
         repartitioned: bool,
         cache_hit: bool,
         step: int | None = None,
+        priced: tuple[float, float, float] | None = None,
     ) -> AdaptationEvent:
+        """Record one event.
+
+        ``priced`` is the precomputed ``(partial, no_offload,
+        full_offload)`` triple when the caller already priced the whole
+        trace in one batched evaluation (:meth:`sweep` passes ``g=None``
+        then); the serial path evaluates the three numbers on ``g`` —
+        bit-identical to one row of the batched report (see
+        ``repro.core.pricing``).
+        """
         assert self._current is not None
         # Cost of the *current* placement under the *new* environment: if we
         # chose not to repartition, we still pay today's prices.
-        partial = g.total_cost(self._current.local_mask)
-        no_off = baselines.no_offloading(g).cost
-        full = baselines.full_offloading(g).cost
+        if priced is None:
+            assert g is not None
+            partial = g.total_cost(self._current.local_mask)
+            no_off = baselines.no_offloading(g).cost
+            full = baselines.full_offloading(g).cost
+        else:
+            partial, no_off, full = priced
         event = AdaptationEvent(
             step=self._step if step is None else step,
             env=env,
@@ -235,9 +272,7 @@ class AdaptiveController:
 
     def observe(self, env: Environment) -> AdaptationEvent:
         """Feed one environment measurement; repartition if warranted."""
-        anchor = self.drift._anchor
-        prev_since = self._steps_since
-        had_partition = self._has_partition
+        checkpoint = self.checkpoint_decision()
         g, due = self.begin_step(env)
         if not due:
             return self.commit_step(g, env, None, repartitioned=False)
@@ -247,9 +282,7 @@ class AdaptiveController:
             # a solver failure must not corrupt the loop: undo the decision
             # effects so the next observe() retries instead of serving a
             # placement that never arrived
-            self.drift._anchor = anchor
-            self._steps_since = prev_since + 1
-            self._has_partition = had_partition
+            self.rollback_decision(checkpoint)
             raise
         return self.commit_step(
             g, env, candidate, repartitioned=True, cache_hit=cache_hit
@@ -259,14 +292,18 @@ class AdaptiveController:
     def sweep(self, envs: Sequence[Environment]) -> list[AdaptationEvent]:
         """Batched Fig.-1 loop: one fused ``solve_envs`` dispatch per sweep.
 
-        Semantics match calling :meth:`observe` per environment (identical
-        events when ``cache is None``), but all repartition points are
-        solved together: pass 1 replays the drift/cooldown decision
+        Semantics match calling :meth:`observe` per environment
+        (bit-identical events when ``cache is None``), but all
+        repartition points are solved together and the whole trace is
+        priced together: pass 1 replays the drift/cooldown decision
         sequence (which never depends on solver output), pass 2 resolves
         each repartition from the cache or the fused build+solve program
         (WCG construction happens on-device, inside the same XLA program
-        as the solver), pass 3 emits events with the usual
-        stale-placement repricing priced on one vectorized host build.
+        as the solver), pass 3 prices every step — current placement,
+        no-offload and full-offload baselines, stale-placement repricing
+        and the §4.3 clamps — in ONE
+        :func:`repro.core.pricing.price_batch` evaluation, and pass 4
+        emits events from the report.
 
         Exact cache-counter parity with the serial loop assumes the cache
         capacity exceeds the number of distinct environment bins in one
@@ -300,6 +337,10 @@ class AdaptiveController:
         # place of K per-environment Python constructions; rows are
         # bit-identical to cost_model.build(profile, env).
         batch = self.cost_model.build_batch(self.profile, envs)
+        # Vectorized §7.1 all-local baselines for the whole sweep.  These
+        # also drive the §4.3 clamp of solved candidates, so no per-step
+        # baseline evaluation remains anywhere in the sweep.
+        no_off_costs = np.asarray(batch.w_local).sum(axis=-1)
         # per repartition step: ("mask", mask) — cache hit; ("solve", slot)
         # — own batched solve; ("reuse", slot) — same-bin reuse in-sweep
         source: dict[int, tuple] = {}
@@ -341,36 +382,90 @@ class AdaptiveController:
             else []
         )
         clamped_solved = [
-            self._clamp(batch.wcg(solve_steps[s]), r) for s, r in enumerate(solved)
+            baselines.clamp_no_offloading_priced(r, float(no_off_costs[solve_steps[s]]))
+            for s, r in enumerate(solved)
         ]
         if self.cache is not None:
             for key, slot in pending.items():
                 self.cache.store(key, clamped_solved[slot].local_mask)
 
-        # ---- pass 3: emit events, updating state exactly like observe --
+        # ---- pass 3: ONE fused pricing evaluation, then emit -----------
+        # Simulate the mask the controller will hold at every step.  A
+        # cache/reuse repartition is repriced under its exact current WCG
+        # and §4.3-clamped, but the clamp depends on the repriced cost —
+        # which comes out of the same batched evaluation.  So each row
+        # carries the *candidate* mask plus the row index whose clamp
+        # decision governs it, and the select below resolves the priced
+        # cost to the no-offloading number exactly when that governing
+        # step clamped (the placement is all-local from then on).
+        k, n = len(envs), self.profile.n
+        masks = np.ones((k, batch.m), dtype=bool)
+        governs: list[int | None] = [None] * k
+        cur_mask = (
+            np.asarray(self._current.local_mask, dtype=bool)
+            if self._current is not None
+            else None
+        )
+        cur_govern: int | None = None
+        for i in range(k):
+            if decisions[i]:
+                kind, payload = source[i]
+                if kind == "solve":
+                    cur_mask = clamped_solved[payload].local_mask
+                    cur_govern = None  # already clamped in pass 2
+                else:  # "mask" (cache hit) / "reuse" (in-sweep follower)
+                    cur_mask = np.asarray(
+                        payload
+                        if kind == "mask"
+                        else clamped_solved[payload].local_mask,
+                        dtype=bool,
+                    )
+                    cur_govern = i
+            assert cur_mask is not None  # decisions guarantee a partition
+            governs[i] = cur_govern
+            masks[i, :n] = cur_mask
+        report = pricing.price_batch(batch, masks)
+        clamped = report.no_offload_cost < report.partial_cost  # §4.3, strict
+
+        # ---- pass 4: emit events, updating state exactly like observe --
         events: list[AdaptationEvent] = []
         for i, env in enumerate(envs):
             self._step += 1
             self._steps_since += 1
-            g = batch.wcg(i)
             cache_hit = False
+            j = governs[i]
+            take_no_off = j is not None and bool(clamped[j])
+            partial = float(
+                report.no_offload_cost[i] if take_no_off else report.partial_cost[i]
+            )
             if decisions[i]:
                 kind, payload = source[i]
-                if kind == "mask":
-                    self._current = self._reprice(g, payload)
-                    cache_hit = True
-                elif kind == "solve":
+                if kind == "solve":
                     self._current = clamped_solved[payload]
-                else:  # "reuse": the serial loop would have hit the first
-                    # same-bin step's put() — reprice its mask here
-                    self._current = self._reprice(
-                        g, clamped_solved[payload].local_mask
+                else:
+                    # reprice through the fused report (shared §4.3 clamp)
+                    self._current = baselines.reprice_clamped_priced(
+                        float(report.partial_cost[i]),
+                        float(report.no_offload_cost[i]),
+                        masks[i, :n],
                     )
                     cache_hit = True
                 self.drift.anchor(env)
                 self._steps_since = 0
                 self._has_partition = True
-            events.append(self._emit(g, env, decisions[i], cache_hit))
+            events.append(
+                self._emit(
+                    None,
+                    env,
+                    decisions[i],
+                    cache_hit,
+                    priced=(
+                        partial,
+                        float(report.no_offload_cost[i]),
+                        float(report.full_offload_cost[i]),
+                    ),
+                )
+            )
         return events
 
     @property

@@ -33,7 +33,9 @@ __all__ = [
     "no_offloading",
     "full_offloading",
     "clamp_no_offloading",
+    "clamp_no_offloading_priced",
     "reprice_clamped",
+    "reprice_clamped_priced",
     "brute_force",
     "branch_and_bound",
     "maxflow_optimal",
@@ -97,11 +99,52 @@ def reprice_clamped(g: WCG, local_mask):
     the offload broker (hits and coalesced followers), so the serial and
     served paths can never disagree.
     """
+    mask = np.asarray(local_mask, dtype=bool)
+    return reprice_clamped_priced(g.total_cost(mask), float(g.w_local.sum()), mask)
+
+
+def clamp_no_offloading_priced(candidate, no_off_cost: float):
+    """:func:`clamp_no_offloading` from a PRECOMPUTED all-local baseline.
+
+    The fused pricing paths (sweep pass 2, the broker tick, the
+    placement tier sweep) obtain their no-offloading costs from one
+    vectorized evaluation; this is the single place their §4.3 clamp
+    lives, so a strictness or mask-construction change can never
+    desynchronize them from the scalar path.  ``no_off_cost`` must equal
+    ``no_offloading(g).cost`` for the candidate's graph (the batched
+    baselines are bit-identical to it — see ``repro.core.pricing``).
+    """
+    from repro.core.mcop import MCOPResult  # deferred: avoid import cycle
+
+    if no_off_cost < candidate.min_cut:
+        return MCOPResult(
+            min_cut=float(no_off_cost),
+            local_mask=np.ones(len(candidate.local_mask), dtype=bool),
+            phases=candidate.phases,
+        )
+    return candidate
+
+
+def reprice_clamped_priced(partial_cost: float, no_off_cost: float, local_mask):
+    """:func:`reprice_clamped` from precomputed batch pricing.
+
+    ``partial_cost`` must equal ``g.total_cost(local_mask)`` and
+    ``no_off_cost`` the graph's all-local baseline; the reused mask is
+    kept at the repriced cost, or replaced by the all-local plan when
+    the baseline is strictly cheaper (§4.3).
+    """
     from repro.core.mcop import MCOPResult  # deferred: avoid import cycle
 
     mask = np.asarray(local_mask, dtype=bool)
-    candidate = MCOPResult(min_cut=g.total_cost(mask), local_mask=mask, phases=[])
-    return clamp_no_offloading(g, candidate)
+    if no_off_cost < partial_cost:
+        return MCOPResult(
+            min_cut=float(no_off_cost),
+            local_mask=np.ones(mask.shape[0], dtype=bool),
+            phases=[],
+        )
+    return MCOPResult(
+        min_cut=float(partial_cost), local_mask=mask.copy(), phases=[]
+    )
 
 
 # ----------------------------------------------------------------------

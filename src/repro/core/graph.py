@@ -112,14 +112,25 @@ class WCG:
     def total_cost(self, local_mask: np.ndarray) -> float:
         """Eq. 2: total cost of the placement ``I`` (True == run locally).
 
-        Cut edges are those with exactly one endpoint local.
+        Args:
+          local_mask: (n,) bool — True places the vertex on the local tier.
+        Returns:
+          float — Σ node costs + Σ cut-edge costs (cut edges are those with
+          exactly one endpoint local).
+
+        The comm term reduces row-by-row (``sum(axis=-1)`` then ``sum()``)
+        so this scalar evaluation is bit-identical to one row of the
+        vectorized :meth:`WCGBatch.total_cost` / :meth:`WCGBatch.price_batch`
+        on an unpadded batch — the parity contract the fused pricing
+        pipeline (``repro.core.pricing``) asserts against.
         """
         local_mask = np.asarray(local_mask, dtype=bool)
         if local_mask.shape != (self.n,):
             raise ValueError("placement mask shape mismatch")
         node_cost = np.where(local_mask, self.w_local, self.w_cloud).sum()
         cut = local_mask[:, None] != local_mask[None, :]
-        comm_cost = float((self.adj * cut).sum()) / 2.0  # each edge counted twice
+        # each edge counted twice (symmetric adj), hence /2
+        comm_cost = float((self.adj * cut).sum(axis=-1).sum()) / 2.0
         return float(node_cost) + comm_cost
 
     def validate_placement(self, local_mask: np.ndarray) -> None:
@@ -322,19 +333,60 @@ class WCGBatch:
         return pin
 
     def total_cost(self, local_masks: np.ndarray) -> np.ndarray:
-        """Vectorized Eq. 2 over the batch: (k,) costs for (k, m) masks.
+        """Vectorized Eq. 2 over the batch.
 
-        Padding must be masked local (True); padded vertices have zero
-        weights and edges, so they never contribute.  Row i matches
-        ``self.wcg(i).total_cost(mask_i)``.
+        Args:
+          local_masks: (k, m) bool — one placement per graph; padding
+            columns must be masked local (True).  Padded vertices carry
+            zero weights and edges, so they contribute exactly 0.0.
+        Returns:
+          (k,) float — row ``i`` equals ``self.wcg(i).total_cost(mask_i)``;
+          *bit*-identical when the batch is unpadded (``m == n_valid[i]``),
+          because both paths reduce the comm term row-by-row in the same
+          order (see :meth:`WCG.total_cost`).
         """
         masks = np.asarray(local_masks, dtype=bool)
         if masks.shape != self.w_local.shape:
             raise ValueError("placement mask batch shape mismatch")
         node = np.where(masks, self.w_local, self.w_cloud).sum(axis=-1)
         cut = masks[:, :, None] != masks[:, None, :]
-        comm = (np.asarray(self.adj) * cut).sum(axis=(-2, -1)) / 2.0
+        comm = (np.asarray(self.adj) * cut).sum(axis=-1).sum(axis=-1) / 2.0
         return node + comm
+
+    def price_batch(
+        self, local_masks: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized pricing of K placements: Eq. 2 plus the §7.1 baselines.
+
+        One call replaces the three per-graph evaluations the adaptive
+        loop's telemetry used to make per event (``total_cost`` of the
+        current placement, the no-offloading cost, the full-offloading
+        cost) — the array-native ``_emit``.
+
+        Args:
+          local_masks: (k, m) bool — the placement to price per graph
+            (padding columns True).
+        Returns:
+          ``(partial, no_offload, full_offload)`` — three (k,) float
+          arrays:
+
+          * ``partial[i]``      = ``wcg(i).total_cost(local_masks[i])``
+          * ``no_offload[i]``   = cost of running everything locally
+            (Σ w_local; the all-True placement has zero cut edges)
+          * ``full_offload[i]`` = cost of offloading every offloadable
+            vertex (the placement mask is exactly ``pinned``)
+
+          On an unpadded batch every number is bit-identical to the
+          scalar path (``g.total_cost`` / ``baselines.no_offloading`` /
+          ``baselines.full_offloading``) — asserted by the pricing
+          parity suite.
+        """
+        partial = self.total_cost(local_masks)
+        # all-local: np.where over an all-True mask sums w_local verbatim
+        # and the cut matrix is empty, so Σ w_local IS the scalar number
+        no_offload = np.asarray(self.w_local).sum(axis=-1)
+        full_offload = self.total_cost(np.asarray(self.pinned, dtype=bool))
+        return partial, no_offload, full_offload
 
 
 jax.tree_util.register_pytree_node(

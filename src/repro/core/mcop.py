@@ -539,16 +539,32 @@ def mcop_batch(
 ) -> list[MCOPResult]:
     """Solve many MCOP instances at once; results in input order.
 
-    Graphs are grouped by the smallest bucket size that fits them and each
-    bucket is solved as a single device dispatch — a ``vmap`` of the jitted
-    solver (``backend="jax"``) or one grid-over-batch Pallas kernel call
-    (``backend="pallas"``).  ``backend="reference"`` loops the numpy oracle
-    (for testing/parity).  ``interpret`` only affects the Pallas backend.
+    Args:
+      graphs:   a sequence of :class:`~repro.core.graph.WCG` (arbitrary,
+        heterogeneous sizes), or a single
+        :class:`~repro.core.graph.WCGBatch` of K graphs padded to one
+        static shape ``(k, m[, m])``.
+      backend:  ``"jax"`` (bucketed ``vmap`` of the jitted solver),
+        ``"pallas"`` (one grid-over-batch kernel call per bucket), or
+        ``"reference"`` (loops the numpy oracle — testing/parity).
+      buckets:  static shape buckets; each graph is zero-padded to the
+        smallest bucket ≥ its vertex count and each bucket is ONE device
+        dispatch.  Ignored for a ``WCGBatch`` (its padded shape *is* the
+        bucket).
+      interpret: Pallas-only — force interpret (True) / compiled (False)
+        mode; ``None`` auto-detects (see ``kernels.ops.default_interpret``
+        and the ``REPRO_PALLAS_INTERPRET`` env override).
+    Returns:
+      ``list[MCOPResult]`` in input order; ``result[i].local_mask`` is
+      ``(n_i,)`` bool over graph ``i``'s ORIGINAL vertices (padding
+      cropped), True = execute locally.  ``min_cut`` is the Eq.-10
+      optimum in solver precision (f64 when x64 is enabled on the jax
+      backend, f32 otherwise).
 
-    A :class:`~repro.core.graph.WCGBatch` is accepted directly: its padded
-    shape *is* the bucket, so the per-graph packing (``_pack_bucket``) is
-    skipped and ``buckets`` is ignored — the array-native path for callers
-    that construct stacked tensors in the first place.
+    The WCGBatch form is the array-native path for callers that hold
+    stacked tensors already (cost-model ``build_batch`` output, the
+    placement tier sweep, the broker's bucket flush): the per-graph
+    packing pass (``_pack_bucket``) is skipped entirely.
     """
     if isinstance(graphs, WCGBatch):
         return _solve_wcg_batch(graphs, backend=backend, interpret=interpret)
@@ -627,18 +643,34 @@ def solve_envs(
 ) -> list[MCOPResult]:
     """Fused Fig.-1 pipeline: K environments → K placements, one dispatch.
 
+    Args:
+      profile: :class:`~repro.core.cost_models.AppProfile` — the
+        environment-independent application description; its ``(n,)`` /
+        ``(n, n)`` tensors are zero-padded once to the shape bucket.
+      model:   :class:`~repro.core.cost_models.CostModel`; its
+        ``batch_weights`` runs INSIDE the jitted program.  Compiled
+        programs are cached per ``model.fingerprint`` (equal-fingerprint
+        models must price identically).
+      envs:    K :class:`~repro.core.cost_models.Environment` points; six
+        scalars per environment are all that crosses the host boundary.
+      backend: ``"jax"`` / ``"pallas"`` for the fused program, or
+        ``"reference"`` to route the vectorized host build through the
+        numpy oracle (exact-parity testing).
+      buckets: static shape buckets for the padded vertex count.
+      interpret: Pallas-only interpret/compiled override.
+    Returns:
+      ``list[MCOPResult]``, one per environment in input order, masks
+      ``(n,)`` bool over the profile's vertices.
+
     ``model.batch_weights`` (WCG construction) and the batched
     Stoer–Wagner solver are jitted into ONE XLA program per (cost model,
-    shape bucket), so a sweep/broker tick moves only six scalars per
-    environment across the host boundary — no per-environment Python
-    ``WCG`` objects, no separate packing pass.  Placements match the
-    object path ``mcop_batch([model.build(profile, e) for e in envs])``
-    (asserted by the parity suite; note construction happens in the
-    solver dtype here, so an *exact* tie between two cuts could in
-    principle resolve differently than the build-f64-then-cast object
-    path — equal-cost placements either way).  ``backend="reference"``
-    routes the vectorized host build through the numpy oracle for
-    exact-parity testing.  ``interpret`` only affects the Pallas backend.
+    shape bucket) — no per-environment Python ``WCG`` objects, no
+    separate packing pass.  Placements match the object path
+    ``mcop_batch([model.build(profile, e) for e in envs])`` (asserted by
+    the parity suite; note construction happens in the solver dtype
+    here, so an *exact* tie between two cuts could in principle resolve
+    differently than the build-f64-then-cast object path — equal-cost
+    placements either way).
     """
     from repro.core.cost_models import EnvArrays  # deferred: no import cycle
 

@@ -197,7 +197,8 @@ def _finalize_plan(g: WCG, result: MCOPResult, bw: float) -> PlacementPlan:
     tier = (~result.local_mask).astype(np.int32)
     boundary, contig_cost = _contiguous_refinement(g)
     cut = result.local_mask[:, None] != result.local_mask[None, :]
-    cut_bytes = float((g.adj * cut).sum() / 2.0 * bw)
+    # row-major reduction, matching the vectorized batch finalization
+    cut_bytes = float((g.adj * cut).sum(axis=-1).sum() / 2.0 * bw)
     return PlacementPlan(
         stage_tier=tier,
         mcop_cost=float(result.min_cut),
@@ -233,6 +234,35 @@ def plan_placement(
     return _finalize_plan(g, result, bw)
 
 
+def _contiguous_costs_batch(batch: WCGBatch) -> np.ndarray:
+    """Vectorized :func:`_contiguous_refinement` scan over an unpadded batch.
+
+    Returns (k, n) Eq.-2 costs where column ``j`` is the chain split
+    ``b = j + 1`` (stages [0, b) local); splits that would offload a
+    pinned stage are ``inf``.  Row reductions match the scalar
+    ``g.total_cost`` order bit-for-bit, so ``argmin`` resolves exact ties
+    to the same boundary the serial first-minimum scan picks.
+    """
+    wl = np.asarray(batch.w_local)
+    wc = np.asarray(batch.w_cloud)
+    adj = np.asarray(batch.adj)
+    pin = np.asarray(batch.pinned, dtype=bool)
+    k, m = wl.shape
+    bmasks = np.tril(np.ones((m, m), dtype=bool))  # row j: [0, j] local
+    node = np.where(bmasks[None], wl[:, None, :], wc[:, None, :]).sum(axis=-1)
+    cut = bmasks[:, :, None] != bmasks[:, None, :]
+    comm = np.empty((k, m))
+    # chunk the boundary axis: the (k, nb, m, m) temp stays bounded while
+    # per-(row, boundary) reduction order — hence bit-parity — is untouched
+    step = max(1, int(4_000_000 // max(k * m * m, 1)))
+    for s in range(0, m, step):
+        comm[:, s : s + step] = (
+            adj[:, None, :, :] * cut[None, s : s + step]
+        ).sum(axis=-1).sum(axis=-1) / 2.0
+    viol = (~bmasks[None, :, :] & pin[:, None, :]).any(axis=-1)
+    return np.where(viol, np.inf, node + comm)
+
+
 def plan_placement_batch(
     stages: Sequence[StageSpec],
     tier_local: TierSpec,
@@ -248,10 +278,21 @@ def plan_placement_batch(
     the whole sweep instead of one trace per point.  Array-native: the
     stage graph is rooflined ONCE (node weights don't depend on the link),
     the K adjacencies are a single broadcast edge rescale (Eq. 1: edges
-    are ``bytes/B``), and the stacked :class:`~repro.core.graph.WCGBatch`
-    goes straight into :func:`mcop_batch` — no per-bandwidth Python graph
-    construction.  Results match calling :func:`plan_placement` per
-    bandwidth.
+    are ``bytes/B``), the stacked :class:`~repro.core.graph.WCGBatch`
+    goes straight into :func:`mcop_batch`, and the *pricing* side of the
+    plans — §4.3 clamp baselines, cut-byte statistics and the contiguous
+    refinement scan — is one vectorized evaluation over the sweep instead
+    of O(k·n) scalar ``total_cost`` calls.  Results match calling
+    :func:`plan_placement` per bandwidth (boundaries and tiers exactly).
+
+    Args:
+      stages:         the framework-level WCG vertices (chain order).
+      tier_local/tier_remote: the two placement sides.
+      inter_tier_bws: K link bandwidths (bytes/s); 0/None falls back to
+        ``min(link_bw)`` exactly like :func:`plan_placement`.
+      backend:        MCOP batch backend for the solve.
+    Returns:
+      list of K :class:`PlacementPlan`, in ``inter_tier_bws`` order.
     """
     # same None/0 fallback plan_placement applies, so results really match
     bws = [
@@ -269,8 +310,41 @@ def plan_placement_batch(
         names=base.names,
     )
     results = mcop_batch(batch, backend=backend)
-    plans = []
-    for i, (r, bw) in enumerate(zip(results, bws)):
-        g = batch.wcg(i)
-        plans.append(_finalize_plan(g, baselines.clamp_no_offloading(g, r), bw))
-    return plans
+
+    # ---- vectorized finalization (the sweep's pricing side) -----------
+    # Unpadded pricing view: host reductions on (k, n[, n]) tensors are
+    # bit-identical to the scalar per-plan path (see WCG.total_cost).
+    price = WCGBatch(
+        np.ascontiguousarray(batch.w_local[:, :n]),
+        np.ascontiguousarray(batch.w_cloud[:, :n]),
+        np.ascontiguousarray(batch.adj[:, :n, :n]),
+        np.ascontiguousarray(batch.pinned[:, :n]),
+        n_valid=(n,) * k,
+        names=base.names,
+    )
+    no_off = np.asarray(price.w_local).sum(axis=-1)  # §7.1 all-local baseline
+    clamped = [
+        baselines.clamp_no_offloading_priced(r, float(no_off[i]))  # §4.3
+        for i, r in enumerate(results)
+    ]
+    final_masks = np.stack([r.local_mask for r in clamped])
+    mcop_costs = np.array([r.min_cut for r in clamped])
+    cut = final_masks[:, :, None] != final_masks[:, None, :]
+    cut_bytes = (
+        (np.asarray(price.adj) * cut).sum(axis=-1).sum(axis=-1) / 2.0 * scale
+    )
+    ccosts = _contiguous_costs_batch(price)
+    b_idx = np.argmin(ccosts, axis=-1)  # first minimum, like the serial scan
+
+    return [
+        PlacementPlan(
+            stage_tier=(~final_masks[i]).astype(np.int32),
+            mcop_cost=float(mcop_costs[i]),
+            contiguous_boundary=int(b_idx[i]) + 1,
+            contiguous_cost=float(ccosts[i, b_idx[i]]),
+            contiguity_penalty=float(ccosts[i, b_idx[i]] - mcop_costs[i]),
+            cut_bytes=float(cut_bytes[i]),
+            result=result,
+        )
+        for i, result in enumerate(clamped)
+    ]

@@ -190,12 +190,26 @@ class PlacementCache:
     def get(
         self, env: Environment, expected_n: int | None = None
     ) -> np.ndarray | None:
-        """Counted lookup by environment; a wrong-length mask is a miss."""
+        """Counted lookup by environment.
+
+        Args:
+          env:        the exact measured environment; quantized to a bin
+                      key by the cache's :class:`EnvQuantizer`.
+          expected_n: caller's graph size; a cached mask of any other
+                      length is treated as a miss (guards a cache
+                      mis-shared across profiles).
+        Returns:
+          ``(n,)`` bool local-mask *copy*, or ``None`` on miss.  Callers
+          must re-price the mask under their exact current WCG
+          (``g.total_cost(mask)``) — the honesty contract for every
+          reused placement.
+        """
         mask = self.lookup(self.key(env), expected_n)
         self.record(mask is not None)
         return mask
 
     def put(self, env: Environment, local_mask: np.ndarray) -> None:
+        """Store ``local_mask`` ((n,) bool, copied) under ``env``'s bin."""
         self.store(self.key(env), local_mask)
 
     # -- observability --------------------------------------------------

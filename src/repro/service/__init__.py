@@ -1,12 +1,15 @@
 """Service layer: the offload broker that turns the solver into a server.
 
-``broker``   — :class:`OffloadBroker`: async multi-tenant coalescing
-               front end over ``mcop_batch`` with persistent per-tenant
-               placement caches and tick telemetry.
-``session``  — :class:`BrokerSession`: one user's adaptive loop
-               (paper Fig. 1) with solves routed through the broker.
-``workload`` — deterministic seeded multi-user environment walks for
-               tests, benchmarks and demos.
+``broker``    — :class:`OffloadBroker`: async multi-tenant coalescing
+                front end over ``mcop_batch`` with persistent per-tenant
+                placement caches, fused tick pricing and tick telemetry.
+``scheduler`` — :class:`WeightedFairScheduler`: deficit-round-robin
+                flush order over per-tenant weights, a strict elastic
+                priority lane, and backpressure on queued bins.
+``session``   — :class:`BrokerSession`: one user's adaptive loop
+                (paper Fig. 1) with solves routed through the broker.
+``workload``  — deterministic seeded multi-user environment walks for
+                tests, benchmarks and demos.
 """
 
 from repro.service.broker import (
@@ -16,6 +19,7 @@ from repro.service.broker import (
     PlacementFuture,
     TickReport,
 )
+from repro.service.scheduler import QueueEntry, WeightedFairScheduler
 from repro.service.session import BrokerSession
 from repro.service.workload import (
     DEFAULT_REGIMES,
@@ -32,6 +36,8 @@ __all__ = [
     "OffloadBroker",
     "PlacementFuture",
     "TickReport",
+    "QueueEntry",
+    "WeightedFairScheduler",
     "BrokerSession",
     "DEFAULT_REGIMES",
     "Regime",

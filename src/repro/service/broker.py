@@ -33,12 +33,28 @@ service:
   builder), and each bucket's representatives are packed into a
   :class:`~repro.core.graph.WCGBatch` that ``mcop_batch`` dispatches
   directly — no per-request Python graph objects on the hot path.
-* **Priority lanes** — elastic resize events
+* **Fused tick pricing** — every reply a tick produces (cache hits,
+  representative clamps, coalesced followers) is priced in one
+  vectorized :meth:`~repro.core.graph.WCGBatch.price_batch` evaluation
+  per graph size instead of a scalar ``reprice_clamped`` per future;
+  replies are bit-identical to the serial per-future path (unpadded
+  pricing batches, see ``repro.core.pricing``).
+* **Weighted-fair scheduling** — the flush order is a
+  :class:`~repro.service.scheduler.WeightedFairScheduler`: elastic
+  resize events
   (:meth:`~repro.runtime.elastic.ElasticMeshManager.submit_resize`,
-  ``lane="elastic"``) flush ahead of user-session refreshes within a
-  tick: a shrinking fleet must re-place before any user refresh is
-  served a placement solved for capacity that no longer exists.  Lane
-  occupancy is telemetered per tick (:attr:`TickReport.elastic`).
+  ``lane="elastic"``) remain a strict priority lane (a shrinking fleet
+  must re-place before any user refresh is served a placement solved
+  for capacity that no longer exists), and user-lane requests drain by
+  deficit round robin over per-tenant weights (``register(...,
+  weight=)``), so a chatty tenant cannot starve a light one when
+  :meth:`tick` runs with a ``budget``.  Backpressure: past
+  ``max_queued_bins`` distinct queued (tenant, bin) pairs, a submission
+  opening a new bin is rejected — its future resolves immediately with
+  a :attr:`BrokerReply.rejected` reply.  Lane occupancy, per-tenant
+  shares and rejections are telemetered per tick
+  (:attr:`TickReport.elastic` / :attr:`TickReport.shares` /
+  :attr:`TickReport.rejected`).
 * **Persistence** — tenant caches snapshot/load as JSON
   (:meth:`OffloadBroker.snapshot` / ``warm_start=`` on
   :meth:`OffloadBroker.register`), so a serving restart replays a known
@@ -52,8 +68,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
 from typing import Callable, Sequence
+
+import numpy as np
 
 from repro.core import baselines
 from repro.core.cost_models import AppProfile, CostModel, Environment
@@ -64,6 +81,7 @@ from repro.core.placement_cache import (
     PlacementCache,
     profile_fingerprint,
 )
+from repro.service.scheduler import QueueEntry, WeightedFairScheduler
 
 __all__ = [
     "PlacementFuture",
@@ -85,12 +103,18 @@ class BrokerReply:
     (coalesced followers count as hits: the serial loop would have hit
     the representative's just-stored mask).  ``coalesced`` additionally
     distinguishes same-tick followers from genuine cache hits.
+
+    ``rejected`` marks a backpressure rejection (the scheduler's queued
+    -bin cap was reached); a rejected reply carries ``result=None`` and
+    resolves at submit time, so callers can retry a later tick without
+    waiting.
     """
 
-    result: MCOPResult
+    result: MCOPResult | None
     cache_hit: bool
     coalesced: bool
     tick: int
+    rejected: bool = False
 
 
 class PlacementFuture:
@@ -128,7 +152,8 @@ class TickReport:
 
     tick: int
     queue_depth: int        # requests waiting when the tick started
-    requests: int           # requests drained this tick (== queue_depth)
+    requests: int           # requests drained this tick (== queue_depth
+                            # unless the tick ran with a budget)
     cache_hits: int         # served from a tenant cache, no solve
     coalesced: int          # same-bin followers folded into another solve
     solved: int             # representative solves actually dispatched
@@ -136,6 +161,9 @@ class TickReport:
     buckets: tuple[int, ...]  # bucket sizes dispatched this tick
     latency_s: float        # wall time of the tick under the broker clock
     elastic: int = 0        # priority-lane occupancy: elastic events drained
+    rejected: int = 0       # backpressure rejections since the last tick
+    shares: tuple[tuple[str, int], ...] = ()  # per-tenant requests drained
+                            # this tick (name-sorted) — the WFQ split
 
 
 @dataclasses.dataclass
@@ -149,6 +177,7 @@ class BrokerTelemetry:
     solved: int = 0
     dispatches: int = 0
     elastic_requests: int = 0
+    rejected_requests: int = 0
     max_queue_depth: int = 0
     total_latency_s: float = 0.0
     reports: list[TickReport] = dataclasses.field(default_factory=list)
@@ -162,6 +191,7 @@ class BrokerTelemetry:
         self.solved += report.solved
         self.dispatches += report.dispatches
         self.elastic_requests += report.elastic
+        self.rejected_requests += report.rejected
         self.max_queue_depth = max(self.max_queue_depth, report.queue_depth)
         self.total_latency_s += report.latency_s
         self.reports.append(report)
@@ -189,6 +219,7 @@ class BrokerTelemetry:
             "solved": self.solved,
             "dispatches": self.dispatches,
             "elastic_requests": self.elastic_requests,
+            "rejected_requests": self.rejected_requests,
             "max_queue_depth": self.max_queue_depth,
             "coalesce_ratio": round(self.coalesce_ratio, 4),
             "hit_rate": round(self.hit_rate, 4),
@@ -203,11 +234,7 @@ class _Tenant:
     cost_model: CostModel | None
     cache: PlacementCache
     fingerprint: str | None
-
-
-# Priority lanes, lowest flushes first.  Elastic fleet events re-place
-# before user-session refreshes are served within the same tick.
-_LANE_ORDER = {"elastic": 0, "user": 1}
+    weight: float = 1.0
 
 
 @dataclasses.dataclass
@@ -218,6 +245,11 @@ class _Request:
     future: PlacementFuture
     env: Environment | None = None
     lane: str = "user"
+
+    @property
+    def n(self) -> int:
+        """Graph size of this request (profile size while deferred)."""
+        return self.g.n if self.g is not None else self.tenant.profile.n
 
 
 class OffloadBroker:
@@ -231,6 +263,11 @@ class OffloadBroker:
                 ``mcop_batch`` call per bucket, shared across tenants.
       clock:    injectable monotonic clock for tick-latency telemetry
                 (tests pass a fake clock so reports are deterministic).
+      max_queued_bins: backpressure cap on distinct queued user-lane
+                (tenant, bin) pairs; a submission opening a new bin past
+                the cap gets an immediately-resolved rejection future
+                (``None`` disables rejection — the default, matching the
+                historical unbounded queue).
     """
 
     def __init__(
@@ -239,6 +276,7 @@ class OffloadBroker:
         backend: str = "jax",
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         clock: Callable[[], float] = time.perf_counter,
+        max_queued_bins: int | None = None,
     ):
         if backend not in ("reference", "jax", "pallas"):
             raise ValueError(f"unknown MCOP batch backend: {backend!r}")
@@ -247,7 +285,8 @@ class OffloadBroker:
         self.clock = clock
         self.telemetry = BrokerTelemetry()
         self._tenants: dict[str, _Tenant] = {}
-        self._queue: deque[_Request] = deque()
+        self._scheduler = WeightedFairScheduler(max_queued_bins=max_queued_bins)
+        self._rejected_since_tick = 0
         self._tick = 0
 
     # -- tenants ---------------------------------------------------------
@@ -261,6 +300,7 @@ class OffloadBroker:
         quantizer: EnvQuantizer | None = None,
         cache_capacity: int = 4096,
         warm_start=None,
+        weight: float = 1.0,
     ) -> _Tenant:
         """Register a served application (or a raw-graph producer).
 
@@ -271,6 +311,9 @@ class OffloadBroker:
         ``warm_start`` is a snapshot dict or JSON path loaded into the
         tenant cache under the profile's fingerprint guard — a
         mismatched or corrupt snapshot cold-starts silently.
+        ``weight`` is the tenant's weighted-fair share of a budgeted
+        tick (deficit round robin; see
+        :class:`~repro.service.scheduler.WeightedFairScheduler`).
         """
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already registered")
@@ -285,11 +328,17 @@ class OffloadBroker:
         )
         if cache is None:
             cache = PlacementCache(quantizer, capacity=cache_capacity)
-        tenant = _Tenant(name, profile, cost_model, cache, fingerprint)
+        tenant = _Tenant(name, profile, cost_model, cache, fingerprint, weight)
         if warm_start is not None:
             cache.load(warm_start, fingerprint=fingerprint)
         self._tenants[name] = tenant
+        self._scheduler.ensure_tenant(name, weight=weight)
         return tenant
+
+    def set_weight(self, name: str, weight: float) -> None:
+        """Adjust a tenant's weighted-fair share for future ticks."""
+        self._tenants[name].weight = float(weight)
+        self._scheduler.set_weight(name, weight)
 
     def tenant(self, name: str) -> _Tenant:
         return self._tenants[name]
@@ -304,10 +353,45 @@ class OffloadBroker:
         t.cache.save(path, fingerprint=t.fingerprint)
 
     # -- submission ------------------------------------------------------
+    def _enqueue(self, r: _Request) -> PlacementFuture:
+        """Offer a request to the scheduler, resolving rejections inline.
+
+        The backpressure bin is (tenant, graph size, quantized env) —
+        exactly the coalescing unit, so joining an already-queued bin is
+        always admitted (it costs no extra solver work) and only a
+        submission that would open a new bin past the cap is rejected.
+        """
+        admitted = self._scheduler.submit(
+            QueueEntry(r.tenant.name, r, (r.n, r.key), lane=r.lane)
+        )
+        if not admitted:
+            self._rejected_since_tick += 1
+            r.future.set(
+                BrokerReply(
+                    None,
+                    cache_hit=False,
+                    coalesced=False,
+                    tick=self._tick,
+                    rejected=True,
+                )
+            )
+        return r.future
+
     def submit(
         self, name: str, env: Environment, *, lane: str = "user"
     ) -> PlacementFuture:
         """Enqueue a solve for ``env`` under the tenant's cost model.
+
+        Args:
+          name: registered tenant (must have a profile + cost model).
+          env:  the environment to price/partition for; also determines
+                the coalescing bin via the tenant cache's quantizer.
+          lane: ``"user"`` (weighted-fair) or ``"elastic"`` (strict
+                priority, e.g. fleet resizes).
+        Returns:
+          :class:`PlacementFuture`, resolved by a later :meth:`tick` —
+          or immediately with a ``rejected`` reply when the scheduler's
+          queued-bin cap is reached.
 
         Construction is deferred: the WCG is built at the next tick, where
         all of this tenant's pending environments go through ONE vectorized
@@ -319,37 +403,55 @@ class OffloadBroker:
             raise ValueError(
                 f"tenant {name!r} has no profile; use submit_graph()"
             )
-        future = PlacementFuture()
-        self._queue.append(
-            _Request(t, None, t.cache.key(env), future, env=env, lane=lane)
+        return self._enqueue(
+            _Request(t, None, t.cache.key(env), PlacementFuture(), env=env, lane=lane)
         )
-        return future
 
     def submit_graph(
         self, name: str, g: WCG, env: Environment, *, lane: str = "user"
     ) -> PlacementFuture:
-        """Enqueue a caller-built WCG; ``env`` only determines the bin key."""
+        """Enqueue a caller-built WCG; ``env`` only determines the bin key.
+
+        Same future/rejection semantics as :meth:`submit`; used by
+        raw-graph tenants (elastic manager, broker sessions carrying an
+        already-built controller graph).
+        """
         t = self._tenants[name]
-        future = PlacementFuture()
-        self._queue.append(
-            _Request(t, g, t.cache.key(env), future, env=env, lane=lane)
+        return self._enqueue(
+            _Request(t, g, t.cache.key(env), PlacementFuture(), env=env, lane=lane)
         )
-        return future
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return self._scheduler.pending
+
+    @property
+    def queued_bins(self) -> int:
+        """Distinct queued (tenant, bin) pairs — the backpressure gauge."""
+        return self._scheduler.queued_bins
 
     # -- the tick --------------------------------------------------------
-    def tick(self) -> TickReport:
-        """Drain the queue: lanes → hits → followers → bucket dispatches.
+    def tick(self, *, budget: int | None = None) -> TickReport:
+        """Drain the scheduler: lanes → hits → followers → bucket dispatches.
+
+        Args:
+          budget: optional cap on requests drained this tick.  The
+            weighted-fair scheduler then splits the budget across
+            tenants proportionally to their weights (elastic-lane events
+            always drain first); undrained requests stay queued for the
+            next tick.  ``None`` (default) drains everything.
+        Returns:
+          :class:`TickReport` — per-tick telemetry, including the
+          per-tenant WFQ ``shares`` and backpressure ``rejected`` count.
 
         Elastic-lane requests are flushed ahead of user-lane requests;
-        within a lane, FIFO order is preserved, so cache counters and
+        within a tenant, FIFO order is preserved, so cache counters and
         placements are bit-identical to N serial controllers sharing one
         cache and observing in submission order (asserted by the
         broker↔serial parity tests).  Deferred (env-only) submissions are
-        materialized here, one vectorized cost-model build per tenant.
+        materialized here, one vectorized cost-model build per tenant,
+        and every reply is priced in one vectorized evaluation per graph
+        size (see :meth:`_price_replies`).
 
         Failure containment: if a solve dispatch raises (transient
         device/XLA error), every request whose future is still unresolved
@@ -359,17 +461,17 @@ class OffloadBroker:
         """
         t0 = self.clock()
         self._tick += 1
-        requests = list(self._queue)
-        self._queue.clear()
-        requests.sort(key=lambda r: _LANE_ORDER.get(r.lane, 1))  # stable
+        depth = self._scheduler.pending
+        entries = self._scheduler.drain(budget)
+        requests = [e.item for e in entries]
         try:
             # materialization is inside the containment: a failing deferred
             # build (bad environment) must re-queue innocents, not drop them
             self._materialize(requests)
-            return self._run_tick(requests, t0)
+            return self._run_tick(requests, depth, t0)
         except BaseException:
-            self._queue.extendleft(
-                r for r in reversed(requests) if not r.future.done
+            self._scheduler.requeue(
+                e for e in entries if not e.item.future.done
             )
             raise
 
@@ -390,10 +492,41 @@ class OffloadBroker:
             for i, r in enumerate(rs):
                 r.g = batch.wcg(i)
 
-    def _run_tick(self, requests: list[_Request], t0: float) -> TickReport:
-        depth = len(requests)
+    @staticmethod
+    def _price_rows(
+        graphs: list[WCG], masks: list[np.ndarray]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized Eq.-2 + all-local pricing of (graph, mask) rows.
+
+        One :meth:`~repro.core.graph.WCGBatch.total_cost` evaluation per
+        distinct graph size (unpadded, so every number is bit-identical
+        to the scalar per-row path — see ``repro.core.pricing``).
+        Returns ``(partial, no_offload)`` float arrays aligned with the
+        rows.
+        """
+        partial = np.zeros(len(graphs))
+        no_off = np.zeros(len(graphs))
+        by_n: dict[int, list[int]] = {}
+        for i, g in enumerate(graphs):
+            by_n.setdefault(g.n, []).append(i)
+        for n, idxs in by_n.items():
+            batch = WCGBatch.from_wcgs([graphs[i] for i in idxs], m=n)
+            stacked = np.stack([masks[i] for i in idxs])
+            partial[idxs] = batch.total_cost(stacked)
+            no_off[idxs] = np.asarray(batch.w_local).sum(axis=-1)
+        return partial, no_off
+
+    def _reply(self, result: MCOPResult, *, cache_hit: bool, coalesced: bool):
+        return BrokerReply(
+            result, cache_hit=cache_hit, coalesced=coalesced, tick=self._tick
+        )
+
+    def _run_tick(
+        self, requests: list[_Request], depth: int, t0: float
+    ) -> TickReport:
         hits = coalesced = 0
         solves: list[_Request] = []
+        hit_rows: list[tuple[_Request, np.ndarray]] = []
         # coalescing key includes the vertex count: a raw-graph tenant may
         # legally mix graph sizes in one env bin, and a follower must never
         # be handed a wrong-length mask (mirrors the cache's expected_n)
@@ -404,14 +537,7 @@ class OffloadBroker:
             if mask is not None:
                 r.tenant.cache.record(True)
                 hits += 1
-                r.future.set(
-                    BrokerReply(
-                        baselines.reprice_clamped(r.g, mask),
-                        cache_hit=True,
-                        coalesced=False,
-                        tick=self._tick,
-                    )
-                )
+                hit_rows.append((r, mask))
                 continue
             slot_key = (r.tenant.name, r.g.n, r.key)
             if slot_key in rep_slot:
@@ -420,6 +546,24 @@ class OffloadBroker:
                 continue
             rep_slot[slot_key] = len(solves)
             solves.append(r)
+
+        # cache hits are priced in ONE vectorized evaluation per graph
+        # size and resolved BEFORE any solver dispatch — a failing
+        # dispatch must not strand futures the cache already answered
+        if hit_rows:
+            h_partial, h_no_off = self._price_rows(
+                [r.g for r, _ in hit_rows], [m for _, m in hit_rows]
+            )
+            for i, (r, mask) in enumerate(hit_rows):
+                r.future.set(
+                    self._reply(
+                        baselines.reprice_clamped_priced(
+                            float(h_partial[i]), float(h_no_off[i]), mask
+                        ),
+                        cache_hit=True,
+                        coalesced=False,
+                    )
+                )
 
         # one mcop_batch call per static shape bucket, shared across
         # tenants; each bucket is packed into a WCGBatch once, so the
@@ -439,35 +583,69 @@ class OffloadBroker:
             for i, res in zip(idxs, batch):
                 solved[i] = res
 
+        # followers are priced in one more vectorized evaluation per graph
+        # size: a follower's row carries its representative's RAW solved
+        # mask, and the reply select below resolves it exactly like
+        # reprice_clamped would.  Representatives only need the all-local
+        # baseline for the §4.3 clamp — a single w_local sum each
+        # (bit-identical to no_offloading(g).cost).
+        row_graphs: list[WCG] = []
+        row_masks: list[np.ndarray] = []
+
+        def add_row(g: WCG, mask) -> int:
+            row_graphs.append(g)
+            row_masks.append(np.asarray(mask, dtype=bool))
+            return len(row_graphs) - 1
+
+        rep_no_off = [float(r.g.w_local.sum()) for r in solves]
+        fol_rows = {
+            s: [add_row(f.g, solved[s].local_mask) for f in fs]
+            for s, fs in followers.items()
+        }
+        partial, no_off = (
+            self._price_rows(row_graphs, row_masks)
+            if row_graphs
+            else (np.zeros(0), np.zeros(0))
+        )
+
         # counter recording for misses/followers happens here, after the
         # dispatches succeeded: a failed tick re-queues these requests, and
         # the retry must not double-count them (a serial shared-cache loop
         # would count each request exactly once).  Followers count as hits:
         # serially they would have hit the representative's put().
         for slot, r in enumerate(solves):
-            candidate = baselines.clamp_no_offloading(r.g, solved[slot])
+            # §4.3 clamp against the baseline; the reply keeps the solver's
+            # own cut value (shared helper with the serial path)
+            rep_clamped = rep_no_off[slot] < solved[slot].min_cut
+            candidate = baselines.clamp_no_offloading_priced(
+                solved[slot], rep_no_off[slot]
+            )
             r.tenant.cache.record(False)
             r.tenant.cache.store(r.key, candidate.local_mask)
-            r.future.set(
-                BrokerReply(
-                    candidate, cache_hit=False, coalesced=False, tick=self._tick
-                )
-            )
-            for f in followers.get(slot, []):
-                f.tenant.cache.record(True)
-                f.future.set(
-                    BrokerReply(
-                        baselines.reprice_clamped(f.g, candidate.local_mask),
-                        cache_hit=True,
-                        coalesced=True,
-                        tick=self._tick,
+            r.future.set(self._reply(candidate, cache_hit=False, coalesced=False))
+            for f, fi in zip(followers.get(slot, ()), fol_rows.get(slot, ())):
+                # a clamped representative hands followers the all-local
+                # mask, whose price is exactly the no-offload baseline
+                if rep_clamped:
+                    res = MCOPResult(
+                        min_cut=float(no_off[fi]),
+                        local_mask=np.ones(f.g.n, dtype=bool),
+                        phases=[],
                     )
-                )
+                else:
+                    res = baselines.reprice_clamped_priced(
+                        float(partial[fi]), float(no_off[fi]), row_masks[fi]
+                    )
+                f.tenant.cache.record(True)
+                f.future.set(self._reply(res, cache_hit=True, coalesced=True))
 
+        shares: dict[str, int] = {}
+        for r in requests:
+            shares[r.tenant.name] = shares.get(r.tenant.name, 0) + 1
         report = TickReport(
             tick=self._tick,
             queue_depth=depth,
-            requests=depth,
+            requests=len(requests),
             cache_hits=hits,
             coalesced=coalesced,
             solved=len(solves),
@@ -475,6 +653,9 @@ class OffloadBroker:
             buckets=tuple(sorted(by_bucket)),
             latency_s=self.clock() - t0,
             elastic=sum(r.lane == "elastic" for r in requests),
+            rejected=self._rejected_since_tick,
+            shares=tuple(sorted(shares.items())),
         )
+        self._rejected_since_tick = 0
         self.telemetry.record(report)
         return report

@@ -72,11 +72,31 @@ class BrokerSession:
 
         The resulting event materializes at :meth:`drain` after the
         broker's next :meth:`~repro.service.broker.OffloadBroker.tick`.
+
+        If the broker rejects the solve outright (backpressure past the
+        scheduler's queued-bin cap), the step degrades to a
+        non-repartition: the decision effects are rolled back — exactly
+        the containment :meth:`~repro.core.adaptive.AdaptiveController.observe`
+        applies on solver failure — so the drift detector retries at the
+        next observation, and :meth:`drain` emits the step priced under
+        the *current* placement.  A rejection before any placement
+        exists raises: the session cannot run without one.
         """
-        g, due = self.controller.begin_step(env)
+        ctl = self.controller
+        checkpoint = ctl.checkpoint_decision()
+        g, due = ctl.begin_step(env)
         future = self.broker.submit_graph(self.tenant, g, env) if due else None
+        if future is not None and future.done and future.result.rejected:
+            ctl.rollback_decision(checkpoint)
+            if ctl._current is None:
+                raise RuntimeError(
+                    f"broker rejected the first placement request of tenant "
+                    f"{self.tenant!r} (backpressure); session has no placement "
+                    "to fall back on — retry after a tick drains the queue"
+                )
+            due, future = False, None  # keep the current placement
         self._pending.append(
-            _PendingStep(g, env, due, future, self.controller._step)
+            _PendingStep(g, env, due, future, ctl._step)
         )
 
     def drain(self) -> list[AdaptationEvent]:

@@ -1,0 +1,401 @@
+"""Fused pricing/telemetry pipeline + weighted-fair broker scheduling.
+
+Two acceptance gates live here:
+
+* **Pricing parity** — :class:`~repro.core.pricing.PriceReport` numbers
+  (and therefore every sweep/broker event) must equal the scalar
+  ``_emit``-style path (``g.total_cost`` + §7.1 baselines +
+  ``offloading_gain``) *bitwise*, across all Fig.-2 topologies × all
+  three cost models.
+* **Scheduler behavior** — deterministic WFQ rotation under asymmetric
+  tenant weights, backpressure rejection past the queued-bin cap, and
+  broker tick events bit-identical to the serial pricing path under the
+  new scheduler.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaptiveController,
+    AppProfile,
+    EnergyModel,
+    Environment,
+    PlacementCache,
+    ResponseTimeModel,
+    WeightedModel,
+    linear_graph,
+    loop_graph,
+    mesh_graph,
+    mcop_reference,
+    offloading_gain,
+    price_batch,
+    price_trace,
+    random_wcg,
+    tree_graph,
+)
+from repro.core import baselines
+from repro.service import (
+    OffloadBroker,
+    QueueEntry,
+    WeightedFairScheduler,
+    run_workload,
+)
+
+pytestmark = pytest.mark.service
+
+FIG2_TOPOLOGIES = {
+    "linear": lambda: linear_graph(9, rng=np.random.default_rng(1)),
+    "loop": lambda: loop_graph(8, rng=np.random.default_rng(2)),
+    "tree": lambda: tree_graph(10, rng=np.random.default_rng(3)),
+    "mesh": lambda: mesh_graph(3, 3, rng=np.random.default_rng(4)),
+}
+
+MODELS = {
+    "time": ResponseTimeModel,
+    "energy": EnergyModel,
+    "weighted": lambda: WeightedModel(0.35),
+}
+
+
+def _envs(k: int = 7) -> list[Environment]:
+    bands = np.geomspace(0.2, 20.0, k)
+    return [
+        Environment.symmetric(float(b), 1.5 + (i % 3)) for i, b in enumerate(bands)
+    ]
+
+
+# ----------------------------------------------------------------------
+# Pricing parity: PriceReport ≡ scalar _emit numbers (bitwise)
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topology", sorted(FIG2_TOPOLOGIES))
+@pytest.mark.parametrize("model_name", sorted(MODELS))
+def test_price_trace_matches_scalar_emit(topology, model_name):
+    """One fused evaluation == K × (total_cost + no-offload + full-offload
+    + gain), bit for bit — the numbers `_emit` used to compute per event."""
+    profile = AppProfile.from_wcg_times(FIG2_TOPOLOGIES[topology]())
+    model = MODELS[model_name]()
+    envs = _envs()
+    rng = np.random.default_rng(9)
+    trace = []
+    for env in envs:
+        mask = rng.integers(0, 2, profile.n).astype(bool) | ~profile.offloadable
+        trace.append((env, mask))
+    report = price_trace(profile, model, trace)
+    assert len(report) == len(trace)
+    for i, (env, mask) in enumerate(trace):
+        g = model.build(profile, env)
+        partial = g.total_cost(mask)
+        no_off = baselines.no_offloading(g).cost
+        full = baselines.full_offloading(g).cost
+        # exact equality, not approx: the fused path IS the scalar path
+        assert report.partial_cost[i] == partial
+        assert report.no_offload_cost[i] == no_off
+        assert report.full_offload_cost[i] == full
+        assert report.gain[i] == offloading_gain(no_off, partial)
+        assert report.row(i) == (partial, no_off, full, offloading_gain(no_off, partial))
+
+
+def test_price_trace_empty_and_shape_validation():
+    profile = AppProfile.from_wcg_times(FIG2_TOPOLOGIES["linear"]())
+    report = price_trace(profile, ResponseTimeModel(), [])
+    assert len(report) == 0
+    with pytest.raises(ValueError):
+        price_trace(
+            profile,
+            ResponseTimeModel(),
+            [(Environment.symmetric(1.0, 2.0), np.ones(3, bool))],
+        )
+
+
+def test_price_batch_is_a_pytree():
+    import jax
+
+    profile = AppProfile.from_wcg_times(FIG2_TOPOLOGIES["tree"]())
+    model = ResponseTimeModel()
+    envs = _envs(3)
+    masks = np.ones((3, profile.n), dtype=bool)
+    report = price_batch(model.build_batch(profile, envs), masks)
+    leaves = jax.tree_util.tree_leaves(report)
+    assert len(leaves) == 4
+    doubled = jax.tree_util.tree_map(lambda a: a * 2.0, report)
+    assert (np.asarray(doubled.partial_cost) == 2.0 * report.partial_cost).all()
+
+
+@pytest.mark.parametrize("model_name", sorted(MODELS))
+def test_sweep_events_bitidentical_to_observe(model_name):
+    """The rewritten sweep (one fused pricing evaluation) must emit events
+    EQUAL to serial observe — stronger than the existing approx tests."""
+    trace = [
+        (8.0, 3.0), (7.6, 3.0), (1.2, 3.0), (1.1, 3.0), (0.3, 3.0),
+        (0.3, 1.5), (6.0, 3.0), (8.0, 3.0), (1.2, 3.0), (0.3, 3.0),
+    ]
+    envs = [Environment.symmetric(b, f) for b, f in trace]
+    g = random_wcg(8, rng=np.random.default_rng(3))
+    prof = AppProfile.from_wcg_times(g)
+    for cache in (None, "fresh"):
+        mk = lambda: AdaptiveController(
+            prof, MODELS[model_name](), threshold=0.15, min_interval=2,
+            backend="reference",
+            cache=PlacementCache() if cache else None,
+        )
+        serial, batched = mk(), mk()
+        ev_s = [serial.observe(e) for e in envs]
+        ev_b = batched.sweep(envs)
+        for a, b in zip(ev_s, ev_b):
+            assert a.partial_cost == b.partial_cost
+            assert a.no_offload_cost == b.no_offload_cost
+            assert a.full_offload_cost == b.full_offload_cost
+            assert a.gain == b.gain
+            assert a.result.min_cut == b.result.min_cut
+            assert (a.result.local_mask == b.result.local_mask).all()
+            assert (a.repartitioned, a.cache_hit) == (b.repartitioned, b.cache_hit)
+
+
+# ----------------------------------------------------------------------
+# WFQ scheduler: deterministic rotation, weights, backpressure
+# ----------------------------------------------------------------------
+
+
+def test_wfq_rotation_under_asymmetric_weights_is_deterministic():
+    sched = WeightedFairScheduler()
+    sched.ensure_tenant("heavy", weight=3.0)
+    sched.ensure_tenant("light", weight=1.0)
+    for i in range(8):
+        sched.submit(QueueEntry("heavy", f"h{i}", bin_key=i))
+        sched.submit(QueueEntry("light", f"l{i}", bin_key=i))
+    order = [e.item for e in sched.drain(budget=12)]
+    # 3:1 rotation, FIFO within a tenant, registration order across them
+    assert order == [
+        "h0", "h1", "h2", "l0",
+        "h3", "h4", "h5", "l1",
+        "h6", "h7", "l2",      # heavy runs dry → light drains its credit
+        "l3",
+    ]
+    assert sched.pending == 4
+    # the remainder drains FIFO once heavy is empty
+    assert [e.item for e in sched.drain()] == ["l4", "l5", "l6", "l7"]
+    assert sched.pending == 0
+
+
+def test_wfq_fractional_weight_accumulates_deficit():
+    sched = WeightedFairScheduler()
+    sched.ensure_tenant("a", weight=1.0)
+    sched.ensure_tenant("b", weight=0.5)
+    for i in range(4):
+        sched.submit(QueueEntry("a", f"a{i}", bin_key=i))
+        sched.submit(QueueEntry("b", f"b{i}", bin_key=i))
+    # b earns 0.5 credit per round: serves on every second round
+    assert [e.item for e in sched.drain(budget=6)] == [
+        "a0", "a1", "b0", "a2", "a3", "b1",
+    ]
+
+
+def test_wfq_budgeted_drains_do_not_starve_late_tenants():
+    """The rotation cursor persists across drains: with 3 equal-weight
+    tenants and budget=2, repeated ticks must serve all three evenly
+    instead of restarting at registration order every time."""
+    sched = WeightedFairScheduler()
+    for t in ("a", "b", "c"):
+        sched.ensure_tenant(t, weight=1.0)
+        for i in range(4):
+            sched.submit(QueueEntry(t, f"{t}{i}", bin_key=i))
+    served: dict[str, int] = {"a": 0, "b": 0, "c": 0}
+    while sched.pending:
+        for e in sched.drain(budget=2):
+            served[e.tenant] += 1
+    assert served == {"a": 4, "b": 4, "c": 4}
+    # and the per-drain interleaving is the persisted rotation
+    for t in ("a", "b", "c"):
+        for i in range(2):
+            sched.submit(QueueEntry(t, f"{t}{i}", bin_key=i))
+    first = [e.item for e in sched.drain(budget=2)]
+    second = [e.item for e in sched.drain(budget=2)]
+    third = [e.item for e in sched.drain(budget=2)]
+    assert [first, second, third] == [["a0", "b0"], ["c0", "a1"], ["b1", "c1"]]
+
+
+def test_wfq_priority_lane_preempts_and_requeue_preserves_order():
+    sched = WeightedFairScheduler()
+    sched.ensure_tenant("t", weight=1.0)
+    sched.submit(QueueEntry("t", "u0", bin_key=0))
+    sched.submit(QueueEntry("t", "e0", bin_key=0, lane="elastic"))
+    sched.submit(QueueEntry("t", "u1", bin_key=1))
+    drained = sched.drain()
+    assert [e.item for e in drained] == ["e0", "u0", "u1"]
+    sched.requeue(drained)
+    assert [e.item for e in sched.drain()] == ["e0", "u0", "u1"]
+
+
+def test_wfq_backpressure_counts_distinct_bins():
+    sched = WeightedFairScheduler(max_queued_bins=2)
+    assert sched.submit(QueueEntry("t", "a", bin_key="bin1"))
+    assert sched.submit(QueueEntry("t", "b", bin_key="bin2"))
+    # joining an existing bin is free (it coalesces)…
+    assert sched.submit(QueueEntry("t", "c", bin_key="bin1"))
+    # …but opening a third bin is rejected
+    assert not sched.submit(QueueEntry("t", "d", bin_key="bin3"))
+    # the priority lane is exempt
+    assert sched.submit(QueueEntry("t", "e", bin_key="bin3", lane="elastic"))
+    assert sched.queued_bins == 2
+    sched.drain()
+    assert sched.queued_bins == 0
+    assert sched.submit(QueueEntry("t", "f", bin_key="bin3"))
+
+
+def test_wfq_validation():
+    with pytest.raises(ValueError):
+        WeightedFairScheduler(quantum=0.0)
+    with pytest.raises(ValueError):
+        WeightedFairScheduler(max_queued_bins=0)
+    sched = WeightedFairScheduler()
+    with pytest.raises(KeyError):
+        sched.set_weight("ghost", 2.0)
+    sched.ensure_tenant("t")
+    with pytest.raises(ValueError):
+        sched.set_weight("t", -1.0)
+
+
+# ----------------------------------------------------------------------
+# Broker over the scheduler: budget shares, rejection futures, parity
+# ----------------------------------------------------------------------
+
+
+def _face_profile() -> AppProfile:
+    from repro.core import face_recognition_graph
+
+    return AppProfile.from_wcg_times(
+        face_recognition_graph(speedup=1.0, bandwidth_mbps=1.0)
+    )
+
+
+def test_broker_budgeted_tick_respects_weights():
+    profile = _face_profile()
+    broker = OffloadBroker(backend="reference", clock=lambda: 0.0)
+    broker.register("heavy", profile, ResponseTimeModel(), weight=3.0)
+    broker.register("light", profile, ResponseTimeModel(), weight=1.0)
+    envs = [Environment.symmetric(0.2 * (i + 1), 3.0) for i in range(8)]
+    futs = []
+    for env in envs:
+        futs.append(broker.submit("heavy", env))
+        futs.append(broker.submit("light", env))
+    report = broker.tick(budget=8)
+    assert report.requests == 8 and report.queue_depth == 16
+    assert dict(report.shares) == {"heavy": 6, "light": 2}
+    assert broker.pending == 8
+    report2 = broker.tick()  # no budget: drains the rest
+    assert report2.requests == 8
+    assert all(f.done for f in futs)
+
+
+def test_broker_rejects_past_queued_bin_cap():
+    profile = _face_profile()
+    broker = OffloadBroker(
+        backend="reference", clock=lambda: 0.0, max_queued_bins=2
+    )
+    broker.register("app", profile, ResponseTimeModel())
+    ok1 = broker.submit("app", Environment.symmetric(8.0, 3.0))
+    ok2 = broker.submit("app", Environment.symmetric(1.0, 3.0))
+    # same bin as ok1 (within the 10% quantizer step): admitted, coalesces
+    ok3 = broker.submit("app", Environment.symmetric(8.05, 3.0))
+    rej = broker.submit("app", Environment.symmetric(0.1, 3.0))
+    assert rej.done and rej.result.rejected and rej.result.result is None
+    assert not any(f.done for f in (ok1, ok2, ok3))
+    assert broker.queued_bins == 2
+    report = broker.tick()
+    assert report.rejected == 1 and report.requests == 3
+    assert broker.telemetry.rejected_requests == 1
+    assert "rejected_requests" in broker.telemetry.summary()
+    assert ok3.result.coalesced and not ok3.result.rejected
+    # a later tick reports no stale rejections, and the freed bins admit
+    assert broker.tick().rejected == 0
+    assert not broker.submit("app", Environment.symmetric(0.1, 3.0)).done
+
+
+def test_session_survives_backpressure_rejection():
+    """A rejected solve degrades the session step to a non-repartition
+    (decision effects rolled back, current placement kept); a rejection
+    before any placement exists raises instead of corrupting the loop."""
+    from repro.service import BrokerSession
+
+    profile = _face_profile()
+    broker = OffloadBroker(
+        backend="reference", clock=lambda: 0.0, max_queued_bins=1
+    )
+    broker.register("app", profile, ResponseTimeModel())
+    session = BrokerSession(broker, "app", threshold=0.1, min_interval=1)
+    session.observe(Environment.symmetric(8.0, 3.0))   # occupies the only bin
+    other = BrokerSession(broker, "app", threshold=0.1, min_interval=1)
+    with pytest.raises(RuntimeError, match="rejected the first placement"):
+        other.observe(Environment.symmetric(1.0, 3.0))  # new bin, no fallback
+
+    broker.tick()
+    (first,) = session.drain()
+    assert first.repartitioned
+    # queue is empty again; install a placement, then overflow the cap
+    session.observe(Environment.symmetric(1.0, 3.0))    # bin now queued
+    session.observe(Environment.symmetric(0.2, 3.0))    # second bin: rejected
+    broker.tick()
+    events = session.drain()
+    assert [e.repartitioned for e in events] == [True, False]
+    # the rejected step kept (and repriced) the queued step's placement
+    assert events[1].result is events[0].result
+    # rollback means the drift detector retries: the next observation of
+    # the same environment repartitions once capacity frees up
+    session.observe(Environment.symmetric(0.2, 3.0))
+    broker.tick()
+    (retry,) = session.drain()
+    assert retry.repartitioned
+
+
+def test_broker_events_bitidentical_to_serial_under_scheduler():
+    """Acceptance: tick events == serial pricing path, exactly."""
+    profile = _face_profile()
+    broker = OffloadBroker(backend="reference", clock=lambda: 0.0)
+    broker.register("app", profile, ResponseTimeModel())
+    report = run_workload(
+        broker, "app", n_users=5, steps=8, threshold=0.15, min_interval=2, seed=13
+    )
+    cache = PlacementCache()
+    ctls = [
+        AdaptiveController(
+            profile, ResponseTimeModel(), threshold=0.15, min_interval=2,
+            backend="reference", cache=cache,
+        )
+        for _ in range(5)
+    ]
+    for t in range(8):
+        for u, ctl in enumerate(ctls):
+            ctl.observe(report.traces[u][t])
+    for u, ctl in enumerate(ctls):
+        assert len(ctl.history) == len(report.events[u])
+        for a, b in zip(ctl.history, report.events[u]):
+            assert a.partial_cost == b.partial_cost
+            assert a.no_offload_cost == b.no_offload_cost
+            assert a.full_offload_cost == b.full_offload_cost
+            assert a.gain == b.gain
+            assert a.result.min_cut == b.result.min_cut
+            assert (a.result.local_mask == b.result.local_mask).all()
+
+
+def test_broker_reply_min_cut_matches_reference_clamp():
+    """Representative replies keep the solver's cut; hits/followers carry
+    the repriced number — both equal to the reference pipeline."""
+    profile = AppProfile.from_wcg_times(random_wcg(7, rng=np.random.default_rng(2)))
+    model = ResponseTimeModel()
+    broker = OffloadBroker(backend="reference", clock=lambda: 0.0)
+    broker.register("app", profile, model)
+    env = Environment.symmetric(2.0, 3.0)
+    rep = broker.submit("app", env)
+    fol = broker.submit("app", Environment.symmetric(2.02, 3.0))
+    broker.tick()
+    g = model.build(profile, env)
+    expected = baselines.clamp_no_offloading(g, mcop_reference(g))
+    assert rep.result.result.min_cut == expected.min_cut
+    assert (rep.result.result.local_mask == expected.local_mask).all()
+    g2 = model.build(profile, Environment.symmetric(2.02, 3.0))
+    expected_f = baselines.reprice_clamped(g2, expected.local_mask)
+    assert fol.result.result.min_cut == expected_f.min_cut
+    assert (fol.result.result.local_mask == expected_f.local_mask).all()

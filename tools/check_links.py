@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Markdown link check over README/docs/ROADMAP (stdlib only).
+
+Verifies that every relative link/image target in the repo's markdown
+surface points at a file or directory that actually exists, and that
+intra-document anchors (``#section``) resolve to a heading.  External
+(``http(s)://``, ``mailto:``) targets are not fetched — CI must not
+depend on network weather.
+
+    python tools/check_links.py [paths...]
+
+Defaults to README.md, ROADMAP.md, PAPER.md, PAPERS.md, CHANGES.md and
+docs/*.md.  Exits non-zero listing every broken link.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) and ![alt](target); stop at the first ')' — markdown
+# targets here never contain parens
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub's heading slug: lowercase, DELETE punctuation (each char,
+    including dots/slashes/em-dashes), then map each space to a dash —
+    runs of spaces become runs of dashes, exactly as GitHub renders."""
+    slug = re.sub(r"[^\w\- ]", "", heading.strip().lower(), flags=re.UNICODE)
+    return slug.replace(" ", "-")
+
+
+def _anchors_of(path: pathlib.Path) -> set[str]:
+    """All anchors a document renders, with GitHub's duplicate-heading
+    deduplication: the second `## Example` becomes ``#example-1``."""
+    text = path.read_text(encoding="utf-8")
+    anchors: set[str] = set()
+    seen: dict[str, int] = {}
+    for heading in _HEADING.findall(_CODE_FENCE.sub("", text)):
+        slug = _anchor(heading)
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def _rel(path: pathlib.Path) -> str:
+    try:
+        return str(path.relative_to(REPO_ROOT))
+    except ValueError:
+        return str(path)
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    text = _CODE_FENCE.sub("", path.read_text(encoding="utf-8"))
+    for target in _LINK.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, https:, mailto:
+            continue
+        base, _, fragment = target.partition("#")
+        dest = path if not base else (path.parent / base).resolve()
+        if base and not dest.exists():
+            errors.append(f"{_rel(path)}: broken link -> {target}")
+            continue
+        if fragment and dest.suffix == ".md" and dest.exists():
+            if _anchor(fragment) not in _anchors_of(dest):
+                errors.append(f"{_rel(path)}: broken anchor -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [pathlib.Path(a).resolve() for a in argv]
+    else:
+        files = [
+            REPO_ROOT / name
+            for name in ("README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md",
+                         "CHANGES.md")
+            if (REPO_ROOT / name).exists()
+        ] + sorted((REPO_ROOT / "docs").glob("*.md"))
+    errors: list[str] = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"missing file: {f}")
+            continue
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
