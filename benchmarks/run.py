@@ -10,13 +10,17 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
     mcop_backends   → §3.1 real-time requirement (ref vs jit vs batched vs Pallas)
     pipeline        → fused env→placement pipeline vs the object path
     broker          → serving tier: multi-user tick throughput, warm restarts
+    scale           → batched session engine: ticks/s and µs/user at
+                      U ∈ {1k, 10k, 100k} vs the per-object baseline
+                      (``REPRO_SCALE_U=1000`` for the CI smoke subset)
     roofline        → §Roofline table from the dry-run artifact
 
 The mcop_backends rows are additionally appended to ``BENCH_mcop.json``,
-the broker rows to ``BENCH_broker.json`` and the pipeline rows to
-``BENCH_pipeline.json`` (bounded trajectories of runs), so
-backend/batching/serving speedups can be tracked across commits; the
-broker and pipeline artifacts are smoke-checked after every append.
+the broker rows to ``BENCH_broker.json``, the pipeline rows to
+``BENCH_pipeline.json`` and the scale rows to ``BENCH_scale.json``
+(bounded trajectories of runs), so backend/batching/serving speedups can
+be tracked across commits; the broker, pipeline and scale artifacts are
+smoke-checked after every append.
 """
 
 from __future__ import annotations
@@ -36,6 +40,7 @@ from benchmarks import (
     optimality_gap,
     pipeline,
     roofline,
+    scale,
 )
 
 MODULES = {
@@ -45,6 +50,7 @@ MODULES = {
     "mcop_backends": mcop_backends,
     "pipeline": pipeline,
     "broker": broker,
+    "scale": scale,
     "compression_ablation": compression_ablation,
     "roofline": roofline,
 }
@@ -56,6 +62,7 @@ _REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 _TRAJECTORY_PATH = _REPO_ROOT / "BENCH_mcop.json"
 _BROKER_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_broker.json"
 _PIPELINE_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_pipeline.json"
+_SCALE_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_scale.json"
 _TRAJECTORY_KEEP = 50  # bounded history of runs
 
 
@@ -125,6 +132,20 @@ def _smoke_check_trajectory(path: pathlib.Path, benchmark: str) -> None:
             raise RuntimeError(
                 f"{path.name}: last run lacks a pipeline/pricing_fused_* row"
             )
+    if benchmark == "scale":
+        # the batched-session series is the PR-6 acceptance artifact:
+        # every run must carry at least one batch row whose derived
+        # column reports both throughput figures
+        batch_rows = [
+            row for row in last["rows"] if row["name"].startswith("scale/batch_u")
+        ]
+        if not batch_rows:
+            raise RuntimeError(f"{path.name}: last run lacks a scale/batch_u* row")
+        for row in batch_rows:
+            if "ticks/s" not in row["derived"] or "us/user" not in row["derived"]:
+                raise RuntimeError(
+                    f"{path.name}: batch row missing throughput figures: {row!r}"
+                )
 
 
 def main(argv=None) -> int:
@@ -151,6 +172,10 @@ def main(argv=None) -> int:
                 _append_trajectory(rows, _PIPELINE_TRAJECTORY_PATH, "pipeline")
                 _smoke_check_trajectory(_PIPELINE_TRAJECTORY_PATH, "pipeline")
                 print("pipeline/smoke,0.00,BENCH_pipeline.json ok", flush=True)
+            elif name == "scale":
+                _append_trajectory(rows, _SCALE_TRAJECTORY_PATH, "scale")
+                _smoke_check_trajectory(_SCALE_TRAJECTORY_PATH, "scale")
+                print("scale/smoke,0.00,BENCH_scale.json ok", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}/ERROR,0.00,{e!r}", flush=True)

@@ -1,0 +1,133 @@
+"""Array-native session engine scale: ticks/sec and µs/user vs U.
+
+The PR-6 tentpole number: one :class:`~repro.service.session.BatchSessionGroup`
+holding U sessions is driven through seeded churning traffic
+(:class:`~repro.service.workload.TrafficGenerator` — Poisson arrivals,
+geometric churn) for a few broker ticks at U ∈ {1k, 10k, 100k}, and the
+row reports ticks/sec and µs per user-observation.  Traffic generation
+is pre-computed outside the timed region, and two warm-up ticks absorb
+jit compilation plus the first-tick solve burst, so the number is the
+steady-state tick cost.
+
+A per-object :class:`~repro.service.session.BrokerSession` baseline runs
+at U=1k; the acceptance criterion — batched µs/user at U=100k strictly
+below the per-object µs/user at U=1k — is asserted here, so a regression
+fails the benchmark run loudly instead of shipping a slow engine.
+
+``REPRO_SCALE_U`` (e.g. ``=1000``) restricts the sweep to one U and
+skips the object baseline/assertion — the CI smoke configuration.
+
+Rows are appended to ``BENCH_scale.json`` by ``benchmarks/run.py`` (a
+bounded trajectory, like ``BENCH_broker.json``) and schema-checked after
+each append.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core import AppProfile, ResponseTimeModel, face_recognition_graph
+from repro.service import (
+    OffloadBroker,
+    TrafficGenerator,
+    run_workload,
+    user_traces,
+)
+
+U_VALUES = (1_000, 10_000, 100_000)
+OBJECT_U = 1_000
+STEPS = 5
+WARMUP = 2
+
+
+def _profile() -> AppProfile:
+    return AppProfile.from_wcg_times(
+        face_recognition_graph(speedup=1.0, bandwidth_mbps=1.0)
+    )
+
+
+def _time_batch(profile: AppProfile, u: int) -> dict:
+    broker = OffloadBroker(backend="jax")
+    broker.register("app", profile, ResponseTimeModel())
+    group = broker.register_batch("app", u, threshold=0.15, min_interval=2)
+    gen = TrafficGenerator(
+        u,
+        seed=7,
+        arrival_rate=max(1.0, 0.02 * u),
+        churn=0.02,
+        initial=u,
+    )
+    # traffic outside the timed region: the benchmark measures the tick
+    ticks = [gen.step() for _ in range(WARMUP + STEPS)]
+    for tk in ticks[:WARMUP]:
+        group.observe(tk.envs, arrived=tk.arrived, departed=tk.departed)
+        broker.tick()
+    t0 = time.perf_counter()
+    for tk in ticks[WARMUP:]:
+        group.observe(tk.envs, arrived=tk.arrived, departed=tk.departed)
+        broker.tick()
+    elapsed = time.perf_counter() - t0
+    reports = group.drain()
+    us_user = elapsed / (STEPS * u) * 1e6
+    tel = broker.telemetry
+    return {
+        "name": f"scale/batch_u{u}",
+        "us_per_call": us_user,
+        "derived": f"{STEPS / elapsed:.2f} ticks/s; {us_user:.2f} us/user;"
+        f" sessions={tel.batch_sessions} solved={tel.batch_solved}"
+        f" hits={sum(r.hits + r.coalesced for r in reports)}",
+        "_us_user": us_user,
+    }
+
+
+def _time_object(profile: AppProfile, u: int) -> dict:
+    broker = OffloadBroker(backend="jax")
+    broker.register("app", profile, ResponseTimeModel())
+    traces = user_traces(u, STEPS, seed=7)  # pre-generated, untimed
+    t0 = time.perf_counter()
+    run_workload(
+        broker,
+        "app",
+        n_users=u,
+        steps=STEPS,
+        threshold=0.15,
+        min_interval=2,
+        traces=traces,
+    )
+    elapsed = time.perf_counter() - t0
+    us_user = elapsed / (STEPS * u) * 1e6
+    tel = broker.telemetry
+    return {
+        "name": f"scale/object_u{u}",
+        "us_per_call": us_user,
+        "derived": f"{STEPS / elapsed:.2f} ticks/s; {us_user:.2f} us/user;"
+        f" per-object BrokerSession baseline; hit={tel.hit_rate:.2f}",
+        "_us_user": us_user,
+    }
+
+
+def run() -> list[dict]:
+    profile = _profile()
+    smoke_u = os.environ.get("REPRO_SCALE_U")
+    u_values = (int(smoke_u),) if smoke_u else U_VALUES
+
+    rows = [_time_batch(profile, u) for u in u_values]
+    if not smoke_u:
+        obj = _time_object(profile, OBJECT_U)
+        rows.append(obj)
+        # acceptance: amortization must beat the per-object engine by
+        # two orders of user count — batched 100k under per-object 1k
+        big = next(r for r in rows if r["name"] == f"scale/batch_u{U_VALUES[-1]}")
+        if not big["_us_user"] < obj["_us_user"]:
+            raise RuntimeError(
+                f"scale regression: batch@{U_VALUES[-1]} "
+                f"{big['_us_user']:.2f} us/user is not below per-object "
+                f"@{OBJECT_U} {obj['_us_user']:.2f} us/user"
+            )
+        big["derived"] += (
+            f"; {obj['_us_user'] / big['_us_user']:.1f}x vs object@{OBJECT_U}"
+        )
+    for r in rows:
+        r.pop("_us_user", None)
+    return rows

@@ -44,7 +44,51 @@ from repro.core.graph import WCG
 from repro.core.mcop import MCOPResult, mcop, solve_envs
 from repro.core.placement_cache import PlacementCache
 
-__all__ = ["EnvironmentDrift", "AdaptiveController", "AdaptationEvent"]
+__all__ = [
+    "EnvironmentDrift",
+    "AdaptiveController",
+    "AdaptationEvent",
+    "drift_exceeded_arrays",
+]
+
+
+def drift_exceeded_arrays(
+    anchor_up,
+    anchor_down,
+    anchor_speedup,
+    up,
+    down,
+    speedup,
+    threshold: float,
+):
+    """Vectorized drift test over K (anchor, observation) pairs.
+
+    The single place the relative-drift comparison lives: the scalar
+    :meth:`EnvironmentDrift.exceeded_between` is literally a batch of
+    one over this function, and the batched session engine
+    (``repro.core.session_batch``) runs it over all active sessions at
+    once — the two paths can never disagree about a drift boundary.
+
+    Written against the array namespace of its inputs (numpy or jax), so
+    it can also run inside a jitted program; the session tick keeps it on
+    host numpy float64 because the decision must stay bit-identical to
+    the scalar controller (jax without x64 would demote to float32).
+    Returns a (k,) bool array: relative drift of bandwidth (either
+    direction) or speedup strictly above ``threshold``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    xp = jnp if isinstance(up, jax.Array) else np
+
+    def rel(new, old):
+        return xp.abs(new - old) / xp.maximum(xp.abs(old), 1e-30)
+
+    return (
+        (rel(up, anchor_up) > threshold)
+        | (rel(down, anchor_down) > threshold)
+        | (rel(speedup, anchor_speedup) > threshold)
+    )
 
 
 @dataclasses.dataclass
@@ -80,15 +124,21 @@ class EnvironmentDrift:
         anchor: Environment, env: Environment, threshold: float
     ) -> bool:
         """Stateless drift test — also used by the batched sweep's decision
-        pre-pass, which simulates anchor updates without mutating state."""
+        pre-pass, which simulates anchor updates without mutating state.
 
-        def rel(new: float, old: float) -> float:
-            return abs(new - old) / max(abs(old), 1e-30)
-
-        return (
-            rel(env.bandwidth_up, anchor.bandwidth_up) > threshold
-            or rel(env.bandwidth_down, anchor.bandwidth_down) > threshold
-            or rel(env.speedup, anchor.speedup) > threshold
+        A batch of one over :func:`drift_exceeded_arrays` (IEEE-identical
+        to the historical scalar expression), so the per-object and
+        batched-session paths share one drift boundary."""
+        return bool(
+            drift_exceeded_arrays(
+                np.float64(anchor.bandwidth_up),
+                np.float64(anchor.bandwidth_down),
+                np.float64(anchor.speedup),
+                np.float64(env.bandwidth_up),
+                np.float64(env.bandwidth_down),
+                np.float64(env.speedup),
+                threshold,
+            )
         )
 
 

@@ -36,6 +36,7 @@ __all__ = [
     "clamp_no_offloading_priced",
     "reprice_clamped",
     "reprice_clamped_priced",
+    "reprice_clamped_rows",
     "brute_force",
     "branch_and_bound",
     "maxflow_optimal",
@@ -145,6 +146,28 @@ def reprice_clamped_priced(partial_cost: float, no_off_cost: float, local_mask):
     return MCOPResult(
         min_cut=float(partial_cost), local_mask=mask.copy(), phases=[]
     )
+
+
+def reprice_clamped_rows(
+    partial_cost: np.ndarray, no_off_cost: np.ndarray, local_masks: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized :func:`reprice_clamped_priced` over K rows at once.
+
+    Same strict-`<` §4.3 comparison, applied elementwise: row ``i`` of the
+    returned ``(min_cut (k,), masks (k, n), clamped (k,))`` equals the
+    scalar helper on ``(partial_cost[i], no_off_cost[i], local_masks[i])``
+    — the batched session tick resolves every cache-hit and coalesced
+    follower through this in one pass.  ``masks`` is a fresh array; rows
+    where the all-local baseline is strictly cheaper come back all-True
+    with ``min_cut == no_off_cost`` (whose price is bit-identical to
+    re-pricing the all-ones mask — a False cut contributes exactly 0.0).
+    """
+    partial_cost = np.asarray(partial_cost, dtype=np.float64)
+    no_off_cost = np.asarray(no_off_cost, dtype=np.float64)
+    masks = np.asarray(local_masks, dtype=bool).copy()
+    clamped = no_off_cost < partial_cost
+    masks[clamped] = True
+    return np.where(clamped, no_off_cost, partial_cost), masks, clamped
 
 
 # ----------------------------------------------------------------------

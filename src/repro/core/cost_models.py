@@ -113,6 +113,31 @@ class EnvArrays(NamedTuple):
     def k(self) -> int:
         return int(self.speedup.shape[0])
 
+    def astype(self, dtype) -> "EnvArrays":
+        return EnvArrays(*(np.asarray(f, dtype) for f in self))
+
+    def env(self, i: int) -> Environment:
+        """Materialize row ``i`` as a scalar :class:`Environment`.
+
+        ``float()`` of a float64 array element is exact, so round-tripping
+        ``from_envs`` → ``env`` preserves every value bitwise — the batched
+        session engine relies on this when it emits per-session events.
+        """
+        return Environment(
+            float(self.bandwidth_up[i]),
+            float(self.bandwidth_down[i]),
+            float(self.speedup[i]),
+            float(self.p_compute[i]),
+            float(self.p_idle[i]),
+            float(self.p_transfer[i]),
+        )
+
+    def take(self, indices) -> "EnvArrays":
+        """Row subset (fancy indexing) — e.g. the cache-miss sessions a
+        batched tick flushes through ``solve_envs``."""
+        idx = np.asarray(indices)
+        return EnvArrays(*(np.asarray(f)[idx] for f in self))
+
 
 @dataclasses.dataclass
 class AppProfile:
@@ -217,7 +242,7 @@ class CostModel:
     def build_batch(
         self,
         profile: AppProfile,
-        envs: Sequence[Environment],
+        envs: "Sequence[Environment] | EnvArrays",
         *,
         m: int | None = None,
         dtype=np.float64,
@@ -225,13 +250,20 @@ class CostModel:
         """K environments → one :class:`WCGBatch` (vectorized host build).
 
         Row ``i`` is bit-identical to ``self.build(profile, envs[i])``;
-        ``m`` optionally zero-pads to a solver bucket size.
+        ``m`` optionally zero-pads to a solver bucket size.  ``envs`` may
+        be an :class:`EnvArrays` already — the batched session engine
+        never materializes per-environment Python objects.
         """
+        env_arrays = (
+            envs.astype(dtype)
+            if isinstance(envs, EnvArrays)
+            else EnvArrays.from_envs(envs, dtype)
+        )
         wl, wc, adj = self.batch_weights(
             np.asarray(profile.t_local, dtype),
             np.asarray(profile.data_in, dtype),
             np.asarray(profile.data_out, dtype),
-            EnvArrays.from_envs(envs, dtype),
+            env_arrays,
         )
         return WCGBatch.pack(
             wl, wc, adj, np.broadcast_to(profile.offloadable, wl.shape),

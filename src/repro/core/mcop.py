@@ -651,8 +651,10 @@ def solve_envs(
         ``batch_weights`` runs INSIDE the jitted program.  Compiled
         programs are cached per ``model.fingerprint`` (equal-fingerprint
         models must price identically).
-      envs:    K :class:`~repro.core.cost_models.Environment` points; six
-        scalars per environment are all that crosses the host boundary.
+      envs:    K :class:`~repro.core.cost_models.Environment` points, or
+        an :class:`~repro.core.cost_models.EnvArrays` holding them as six
+        (k,) columns (the batched session engine's form); six scalars per
+        environment are all that crosses the host boundary.
       backend: ``"jax"`` / ``"pallas"`` for the fused program, or
         ``"reference"`` to route the vectorized host build through the
         numpy oracle (exact-parity testing).
@@ -674,8 +676,10 @@ def solve_envs(
     """
     from repro.core.cost_models import EnvArrays  # deferred: no import cycle
 
-    envs = list(envs)
-    if not envs:
+    if not isinstance(envs, EnvArrays):
+        envs = list(envs)
+    k = envs.k if isinstance(envs, EnvArrays) else len(envs)
+    if k == 0:
         return []
     if backend == "reference":
         return [mcop_reference(g) for g in model.build_batch(profile, envs).to_wcgs()]
@@ -705,12 +709,14 @@ def solve_envs(
         jnp.asarray(data_in),
         jnp.asarray(data_out),
         jnp.asarray(pinned),
-        EnvArrays.from_envs(envs, dtype),
+        envs.astype(dtype)
+        if isinstance(envs, EnvArrays)
+        else EnvArrays.from_envs(envs, dtype),
     )
     cuts, masks = jax.device_get((cuts, masks))  # one host sync
     return [
         MCOPResult(min_cut=float(cuts[i]), local_mask=masks[i, :n].copy(), phases=[])
-        for i in range(len(envs))
+        for i in range(k)
     ]
 
 

@@ -98,10 +98,22 @@ class EnvQuantizer:
 
     rel_step: float = 0.10
 
+    def bins_batch(self, x: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`bin`: geometric binning of an array of scalars.
+
+        The scalar :meth:`bin` rides this exact code path (a batch of
+        one), so batched session engines and per-environment callers can
+        never disagree about a bin boundary — ``np.round`` applies the
+        same round-half-even rule as Python's ``round``.
+        """
+        x = np.asarray(x, dtype=np.float64)
+        safe = np.where(x > 0.0, x, 1.0)
+        b = np.round(np.log(safe) / np.log1p(self.rel_step)).astype(np.int64)
+        # non-positive values: degenerate env; one shared sentinel bin
+        return np.where(x > 0.0, b, np.int64(-(2**31)))
+
     def bin(self, x: float) -> int:
-        if x <= 0.0:
-            return -(2**31)  # degenerate env; one shared bin
-        return round(math.log(x) / math.log1p(self.rel_step))
+        return int(self.bins_batch(np.float64(x)))
 
     def key(self, env: Environment) -> Tuple[int, ...]:
         return (
@@ -111,6 +123,26 @@ class EnvQuantizer:
             self.bin(env.p_compute),
             self.bin(env.p_idle),
             self.bin(env.p_transfer),
+        )
+
+    def keys_batch(self, envs) -> np.ndarray:
+        """K environments (:class:`~repro.core.cost_models.EnvArrays`) →
+        ``(k, 6)`` int64 key rows, column order matching :meth:`key`.
+
+        ``tuple(int(v) for v in row)`` of row ``i`` equals
+        ``self.key(envs.env(i))`` exactly — the vectorized front door the
+        batched session tick probes the cache with.
+        """
+        return np.stack(
+            [
+                self.bins_batch(envs.bandwidth_up),
+                self.bins_batch(envs.bandwidth_down),
+                self.bins_batch(envs.speedup),
+                self.bins_batch(envs.p_compute),
+                self.bins_batch(envs.p_idle),
+                self.bins_batch(envs.p_transfer),
+            ],
+            axis=-1,
         )
 
 
@@ -180,6 +212,11 @@ class PlacementCache:
         else:
             self._misses += 1
 
+    def record_many(self, *, hits: int = 0, misses: int = 0) -> None:
+        """Batched :meth:`record` — one call for a whole tick's counters."""
+        self._hits += int(hits)
+        self._misses += int(misses)
+
     def store(self, key: Tuple[int, ...], local_mask: np.ndarray) -> None:
         self._entries[key] = np.asarray(local_mask, dtype=bool).copy()
         self._entries.move_to_end(key)
@@ -211,6 +248,50 @@ class PlacementCache:
     def put(self, env: Environment, local_mask: np.ndarray) -> None:
         """Store ``local_mask`` ((n,) bool, copied) under ``env``'s bin."""
         self.store(self.key(env), local_mask)
+
+    # -- batch front door (array-native session engine) ------------------
+    def keys_batch(self, envs) -> list[Tuple[int, ...]]:
+        """Quantize K environments (an ``EnvArrays``) to K bin keys.
+
+        One vectorized binning pass; element ``i`` equals
+        ``self.key(envs.env(i))`` exactly (see
+        :meth:`EnvQuantizer.keys_batch`).
+        """
+        rows = self.quantizer.keys_batch(envs)
+        return [tuple(int(v) for v in row) for row in rows]
+
+    def get_many(
+        self, envs, expected_n: int | None = None
+    ) -> list[np.ndarray | None]:
+        """Counted batch lookup: one quantization pass, K probes in order.
+
+        Equivalent to ``[self.get(envs.env(i), expected_n) for i in
+        range(envs.k)]`` — identical returned masks, identical hit/miss
+        counters, identical LRU recency order (probes touch entries in
+        row order) — with the per-environment Python quantization work
+        hoisted into one vectorized pass.
+        """
+        out: list[np.ndarray | None] = []
+        for key in self.keys_batch(envs):
+            mask = self.lookup(key, expected_n)
+            self.record(mask is not None)
+            out.append(mask)
+        return out
+
+    def put_many(self, envs, local_masks) -> None:
+        """Batch store: row ``i`` of ``local_masks`` under ``envs`` row ``i``.
+
+        Same effect as a scalar :meth:`put` loop in row order (later
+        same-bin rows overwrite earlier ones, eviction order included).
+        """
+        masks = np.asarray(local_masks, dtype=bool)
+        keys = self.keys_batch(envs)
+        if masks.ndim != 2 or masks.shape[0] != len(keys):
+            raise ValueError(
+                f"local_masks must be ({len(keys)}, n), got {masks.shape}"
+            )
+        for key, mask in zip(keys, masks):
+            self.store(key, mask)
 
     # -- observability --------------------------------------------------
     def __len__(self) -> int:

@@ -1,0 +1,530 @@
+"""Array-native session engine: K adaptive sessions as one pytree.
+
+PRs 3–5 made the *solver* side of the serving tier array-native — one
+``solve_envs`` flush per tick, one ``price_batch`` for telemetry — but
+every user was still a Python :class:`~repro.service.session.BrokerSession`
+wrapping an :class:`~repro.core.adaptive.AdaptiveController`, so a broker
+tick remained O(users) interpreted work above the solver.  This module
+refactors the session *state itself* into arrays:
+
+* :class:`SessionBatch` — a registered JAX pytree holding, for K
+  sessions: the drift anchors (the environment at the last repartition),
+  current placement masks, installed cut values, the per-session step
+  clock and repartition-cooldown counters, and activity flags (a fixed
+  capacity of slots; Poisson arrivals / geometric churn activate and
+  reset them — see ``repro.service.workload.TrafficGenerator``).
+* :meth:`SessionBatch.begin_step` — the vectorized Fig.-1 decision: one
+  pass of array arithmetic advances every session's clock, runs the
+  shared drift test (:func:`repro.core.adaptive.drift_exceeded_arrays`
+  — literally the same function the scalar controller calls) and moves
+  the anchors of every session whose repartition is due.
+* :func:`tick_sessions` / :meth:`SessionBatch.commit_step` — one tick
+  over all K sessions: (a) one vectorized cache probe on quantized keys
+  (:meth:`~repro.core.placement_cache.EnvQuantizer.keys_batch`), (b) ONE
+  ``solve_envs`` flush for the distinct-bin misses, (c) ONE fused
+  ``price_batch`` pricing every session's final mask, baselines and
+  §4.3 clamps together.
+
+The decision/drift arithmetic stays host numpy float64 on purpose: the
+parity contract below demands bit-identity with the scalar controller,
+and jitting it without x64 would demote the comparisons to float32.
+(:func:`drift_exceeded_arrays` is namespace-polymorphic, so a TPU
+deployment with x64 enabled can move the decision pass on-device without
+touching this module.)
+
+Parity contract (asserted by ``tests/test_session_batch.py`` with
+``==``, not approx): one :func:`tick_sessions` produces events,
+placements and prices **bit-identical** to K
+:class:`~repro.service.session.BrokerSession` objects observing the same
+environments in session-index order through an
+:class:`~repro.service.broker.OffloadBroker` sharing the same cache —
+hits probed before any store of the tick, first miss per quantized bin
+becomes the representative solve, same-bin followers repriced under
+their exact own graph, §4.3 clamps applied through the shared
+``baselines`` helpers.
+
+Failure containment differs from the broker deliberately: the broker
+re-queues unresolved requests, while a batched tick is atomic — if the
+solve flush raises, all decision state is restored to its pre-tick
+checkpoint (no events, no counter updates, no stores) and the caller
+retries the whole tick.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core import pricing
+from repro.core.adaptive import AdaptationEvent, drift_exceeded_arrays
+from repro.core.cost_models import AppProfile, CostModel, EnvArrays
+from repro.core.mcop import DEFAULT_BUCKETS, MCOPResult, solve_envs
+from repro.core.placement_cache import PlacementCache
+
+__all__ = ["SessionBatch", "SessionTickReport", "tick_sessions"]
+
+# AdaptiveController's "no partition yet" cooldown sentinel: a fresh
+# session is always due on its first observation.
+_NEVER = 10**9
+
+# array leaves (pytree children); n/threshold/min_interval are static aux
+_LEAF_FIELDS = (
+    "anchor_up",
+    "anchor_down",
+    "anchor_speedup",
+    "placements",
+    "min_cuts",
+    "steps",
+    "steps_since",
+    "has_partition",
+    "active",
+)
+
+
+@dataclasses.dataclass
+class SessionBatch:
+    """K concurrent adaptive sessions as stacked arrays.
+
+    Attributes:
+      n:            graph size (the tenant profile's vertex count).
+      threshold:    relative drift that triggers re-partitioning.
+      min_interval: cooldown in observations between repartitions.
+      anchor_*:     (k,) f64 — environment at the last repartition (the
+                    drift detector's anchor); 0.0 until one exists.
+      placements:   (k, n) bool — each session's current local-mask.
+      min_cuts:     (k,) f64 — installed result's cut value (NaN until a
+                    partition exists).
+      steps:        (k,) i64 — per-session observation clock (events
+                    carry it, matching ``AdaptiveController._step``).
+      steps_since:  (k,) i64 — observations since the last repartition.
+      has_partition:(k,) bool — a partition exists (or none scheduled).
+      active:       (k,) bool — slot is occupied by a live session.
+
+    A registered pytree: the arrays are children, the scalars static —
+    a batch can cross ``jax.jit`` boundaries (e.g. an on-device decision
+    pass under x64) or be checkpointed with one ``tree_map``.
+    """
+
+    n: int
+    threshold: float
+    min_interval: int
+    anchor_up: np.ndarray
+    anchor_down: np.ndarray
+    anchor_speedup: np.ndarray
+    placements: np.ndarray
+    min_cuts: np.ndarray
+    steps: np.ndarray
+    steps_since: np.ndarray
+    has_partition: np.ndarray
+    active: np.ndarray
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def create(
+        cls,
+        capacity: int,
+        n: int,
+        *,
+        threshold: float = 0.10,
+        min_interval: int = 1,
+    ) -> "SessionBatch":
+        """``capacity`` empty session slots for an ``n``-vertex profile."""
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        if n <= 0:
+            raise ValueError("graph size must be positive")
+        return cls(
+            n=int(n),
+            threshold=float(threshold),
+            min_interval=int(min_interval),
+            anchor_up=np.zeros(capacity),
+            anchor_down=np.zeros(capacity),
+            anchor_speedup=np.zeros(capacity),
+            placements=np.ones((capacity, n), dtype=bool),
+            min_cuts=np.full(capacity, np.nan),
+            steps=np.zeros(capacity, dtype=np.int64),
+            steps_since=np.full(capacity, _NEVER, dtype=np.int64),
+            has_partition=np.zeros(capacity, dtype=bool),
+            active=np.zeros(capacity, dtype=bool),
+        )
+
+    @property
+    def capacity(self) -> int:
+        return int(self.steps.shape[0])
+
+    @property
+    def active_count(self) -> int:
+        return int(np.count_nonzero(self.active))
+
+    def _rows(self, sessions) -> np.ndarray:
+        idx = np.asarray(sessions)
+        if idx.dtype == bool:
+            if idx.shape != (self.capacity,):
+                raise ValueError(
+                    f"session mask must be ({self.capacity},), got {idx.shape}"
+                )
+            idx = np.nonzero(idx)[0]
+        return idx.astype(np.int64).reshape(-1)
+
+    # -- churn: slot lifecycle ------------------------------------------
+    def activate(self, sessions) -> None:
+        """Reset the given slots (index array or (k,) bool mask) to a
+        fresh session and mark them live — an arrival.  A fresh session
+        has no partition, so its first observation is always due."""
+        idx = self._rows(sessions)
+        if idx.size == 0:
+            return
+        for f in ("anchor_up", "anchor_down", "anchor_speedup"):
+            getattr(self, f)[idx] = 0.0
+        self.placements[idx] = True
+        self.min_cuts[idx] = np.nan
+        self.steps[idx] = 0
+        self.steps_since[idx] = _NEVER
+        self.has_partition[idx] = False
+        self.active[idx] = True
+
+    def deactivate(self, sessions) -> None:
+        """Mark the given slots free — a departure.  State is cleared at
+        the next :meth:`activate`, so a just-departed slot stays
+        inspectable until reused."""
+        idx = self._rows(sessions)
+        self.active[idx] = False
+
+    # -- atomic-tick checkpointing --------------------------------------
+    def checkpoint(self) -> tuple:
+        """Copies of all mutable arrays (pair with :meth:`restore`)."""
+        return tuple(getattr(self, f).copy() for f in _LEAF_FIELDS)
+
+    def restore(self, state: tuple) -> None:
+        for f, a in zip(_LEAF_FIELDS, state):
+            setattr(self, f, a)
+
+    # -- the vectorized Fig.-1 decision ---------------------------------
+    def begin_step(self, envs: EnvArrays) -> np.ndarray:
+        """Advance every active session's clock and decide repartitions.
+
+        One vectorized pass replicating
+        :meth:`~repro.core.adaptive.AdaptiveController.begin_step` per
+        row: clocks advance, the shared drift test runs against the
+        anchors, and every due session's anchor moves to today's
+        environment with its cooldown reset.  Returns the (k,) bool
+        "repartition due" mask (False on inactive slots).
+
+        Like the scalar controller, the decision never depends on solver
+        output — which is exactly what lets :func:`tick_sessions` defer
+        all due sessions to one coalesced solve flush.
+        """
+        if envs.k != self.capacity:
+            raise ValueError(
+                f"envs must carry {self.capacity} rows, got {envs.k}"
+            )
+        act = self.active
+        self.steps[act] += 1
+        self.steps_since[act] += 1
+        exceeded = drift_exceeded_arrays(
+            self.anchor_up,
+            self.anchor_down,
+            self.anchor_speedup,
+            np.asarray(envs.bandwidth_up, dtype=np.float64),
+            np.asarray(envs.bandwidth_down, dtype=np.float64),
+            np.asarray(envs.speedup, dtype=np.float64),
+            self.threshold,
+        )
+        due = act & (
+            ~self.has_partition
+            | (exceeded & (self.steps_since >= self.min_interval))
+        )
+        self.anchor_up = np.where(due, envs.bandwidth_up, self.anchor_up)
+        self.anchor_down = np.where(due, envs.bandwidth_down, self.anchor_down)
+        self.anchor_speedup = np.where(due, envs.speedup, self.anchor_speedup)
+        self.steps_since = np.where(due, 0, self.steps_since)
+        self.has_partition = self.has_partition | due
+        return due
+
+    # -- commit ----------------------------------------------------------
+    def commit_step(
+        self,
+        due: np.ndarray,
+        final_masks: np.ndarray,
+        new_min_cuts: np.ndarray,
+    ) -> None:
+        """Install the tick's resolved placements (due rows only).
+
+        ``final_masks`` is the full (k, n) mask table with non-due rows
+        already carrying their current placement (the form
+        :func:`tick_sessions` prices), ``new_min_cuts`` likewise (k,).
+        """
+        self.placements = np.where(due[:, None], final_masks, self.placements)
+        self.min_cuts = np.where(due, new_min_cuts, self.min_cuts)
+
+
+jax.tree_util.register_pytree_node(
+    SessionBatch,
+    lambda b: (
+        tuple(getattr(b, f) for f in _LEAF_FIELDS),
+        (b.n, b.threshold, b.min_interval),
+    ),
+    lambda aux, children: SessionBatch(aux[0], aux[1], aux[2], *children),
+)
+
+
+@dataclasses.dataclass
+class SessionTickReport:
+    """One batched tick's outcome, as (k,)/(k, n) arrays.
+
+    The array twin of a list of K
+    :class:`~repro.core.adaptive.AdaptationEvent` — at 10⁵–10⁶ sessions
+    the tick never materializes Python event objects; benchmarks and
+    dashboards consume the arrays, and the parity tests call
+    :meth:`event` / :meth:`events` to compare individual sessions
+    against the serial loop.
+    """
+
+    steps: np.ndarray            # (k,) i64 session clocks at this tick
+    active: np.ndarray           # (k,) bool
+    repartitioned: np.ndarray    # (k,) bool — the tick's due mask
+    cache_hit: np.ndarray        # (k,) bool (followers count as hits)
+    placements: np.ndarray       # (k, n) bool final masks
+    min_cut: np.ndarray          # (k,) f64 installed result cut values
+    partial_cost: np.ndarray     # (k,) f64 Eq.-2 price of the final mask
+    no_offload_cost: np.ndarray  # (k,) f64 §7.1 all-local baseline
+    full_offload_cost: np.ndarray  # (k,) f64 §7.1 baseline
+    gain: np.ndarray             # (k,) f64 offloading gain
+    envs: EnvArrays              # the observed environments
+    hits: int                    # cache hits among due sessions
+    solved: int                  # representative solves dispatched
+    coalesced: int               # same-bin followers folded into a solve
+    due: int                     # sessions repartitioned this tick
+    device_summary: dict | None = None  # fused device telemetry (optional)
+
+    @property
+    def k(self) -> int:
+        return int(self.steps.shape[0])
+
+    def event(self, i: int) -> AdaptationEvent:
+        """Materialize session ``i``'s tick as a scalar event (parity/
+        debugging path — O(1) Python objects per call, never used by the
+        hot tick)."""
+        return AdaptationEvent(
+            step=int(self.steps[i]),
+            env=self.envs.env(i),
+            result=MCOPResult(
+                min_cut=float(self.min_cut[i]),
+                local_mask=self.placements[i].copy(),
+                phases=[],
+            ),
+            partial_cost=float(self.partial_cost[i]),
+            no_offload_cost=float(self.no_offload_cost[i]),
+            full_offload_cost=float(self.full_offload_cost[i]),
+            gain=float(self.gain[i]),
+            repartitioned=bool(self.repartitioned[i]),
+            cache_hit=bool(self.cache_hit[i]),
+        )
+
+    def events(self, sessions=None) -> list[AdaptationEvent]:
+        """Events for ``sessions`` (default: every active slot, in order)."""
+        if sessions is None:
+            sessions = np.nonzero(self.active)[0]
+        return [self.event(int(i)) for i in np.asarray(sessions).reshape(-1)]
+
+    def summary(self) -> dict:
+        """Aggregate telemetry over active sessions (host reduction)."""
+        act = self.active
+        n_act = max(int(np.count_nonzero(act)), 1)
+        return {
+            "sessions": int(np.count_nonzero(act)),
+            "repartitioned": self.due,
+            "cache_hits": self.hits,
+            "coalesced": self.coalesced,
+            "solved": self.solved,
+            "mean_partial_cost": float(self.partial_cost[act].sum() / n_act)
+            if act.any()
+            else 0.0,
+            "mean_gain": float(self.gain[act].sum() / n_act) if act.any() else 0.0,
+        }
+
+
+def tick_sessions(
+    batch: SessionBatch,
+    envs: EnvArrays,
+    *,
+    profile: AppProfile,
+    model: CostModel,
+    cache: PlacementCache,
+    backend: str = "jax",
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+    device_telemetry: bool = False,
+) -> SessionTickReport:
+    """One broker tick over all K sessions of ``batch``.
+
+    The whole tick is three vectorized stages (plus O(due-sessions)
+    Python for the dict-backed cache probe):
+
+    1. **Decide + probe** — :meth:`SessionBatch.begin_step` takes every
+       drift/cooldown decision in one array pass; due sessions' quantized
+       keys come from one :meth:`EnvQuantizer.keys_batch` evaluation and
+       probe the shared cache in session order (hits see only entries
+       stored by *earlier* ticks, exactly like the broker's
+       classification loop).
+    2. **Solve** — first-miss-per-bin representatives flush through ONE
+       :func:`~repro.core.mcop.solve_envs` call; same-bin followers
+       coalesce onto their representative.
+    3. **Price + commit** — every session's candidate mask (current
+       placement for non-due rows, cached/solved masks for due rows) is
+       priced in ONE fused ``price_batch``; the §4.3 clamps resolve
+       against the same report (representatives by solver cut, hits and
+       followers by repriced cost — the shared ``baselines`` strictness),
+       placements install, and cache counters/stores record.
+
+    Bit-identity: with ``backend="reference"`` every event this returns
+    equals the serial ``BrokerSession`` loop bitwise (see module
+    docstring).  With the f32 jax/pallas backends the *solver* may in
+    principle resolve an exact cut tie differently than the broker's
+    build-f64-then-cast path (same caveat as ``solve_envs``); prices are
+    f64 host arithmetic either way.
+
+    Atomic: any failure (solver error, bad environment) restores the
+    batch to its pre-tick state and re-raises — no events, no counter or
+    cache mutations; retry the whole tick.
+    """
+    state = batch.checkpoint()
+    try:
+        due = batch.begin_step(envs)
+        n = batch.n
+        # one vectorized host f64 build: pricing, baselines and clamps for
+        # the whole batch (rows bit-identical to cost_model.build)
+        wcg_batch = model.build_batch(profile, envs)
+        no_off = np.asarray(wcg_batch.w_local).sum(axis=-1)  # (k,)
+
+        # ---- stage 1: classify due sessions against the cache ----------
+        due_idx = np.nonzero(due)[0]
+        keys = cache.quantizer.keys_batch(envs.take(due_idx)) if due_idx.size else None
+        hit_idx: list[int] = []
+        hit_masks: list[np.ndarray] = []
+        solve_idx: list[int] = []
+        solve_keys: list[tuple] = []
+        fol_idx: list[int] = []
+        fol_slot: list[int] = []
+        rep_slot: dict[tuple, int] = {}
+        for row, i in enumerate(due_idx):
+            key = tuple(int(v) for v in keys[row])
+            mask = cache.lookup(key, expected_n=n)
+            if mask is not None:
+                hit_idx.append(int(i))
+                hit_masks.append(mask)
+                continue
+            slot = rep_slot.get(key)
+            if slot is None:
+                rep_slot[key] = len(solve_idx)
+                solve_idx.append(int(i))
+                solve_keys.append(key)
+            else:
+                fol_idx.append(int(i))
+                fol_slot.append(slot)
+
+        # ---- stage 2: ONE solve flush for the distinct-bin misses ------
+        solved = (
+            solve_envs(
+                profile,
+                model,
+                envs.take(solve_idx),
+                backend=backend,
+                buckets=buckets,
+            )
+            if solve_idx
+            else []
+        )
+        solver_cuts = np.array([r.min_cut for r in solved], dtype=np.float64)
+        solved_masks = (
+            np.stack([r.local_mask for r in solved]).astype(bool)
+            if solved
+            else np.zeros((0, n), dtype=bool)
+        )
+        # §4.3 clamp of representatives: strictly cheaper all-local plan
+        # wins, judged against the solver's own cut value (the comparison
+        # clamp_no_offloading_priced applies)
+        rep_clamped = (
+            no_off[solve_idx] < solver_cuts
+            if solve_idx
+            else np.zeros(0, dtype=bool)
+        )
+
+        # ---- stage 3: ONE fused pricing pass over candidate masks ------
+        rows = batch.placements.copy()
+        sel = np.zeros(batch.capacity, dtype=bool)  # rows clamped by price
+        if hit_idx:
+            rows[hit_idx] = np.stack(hit_masks)
+            sel[hit_idx] = True
+        if solve_idx:
+            rows[solve_idx] = np.where(
+                rep_clamped[:, None], True, solved_masks
+            )
+        if fol_idx:
+            # followers carry their representative's mask: the FINAL
+            # (clamped) one — all-local when the rep clamped, whose price
+            # is exactly the no-offload baseline, so the select below is
+            # a no-op for them (matching the broker's explicit all-local
+            # follower reply) — the RAW solved mask otherwise.
+            slots = np.asarray(fol_slot)
+            rows[fol_idx] = np.where(
+                rep_clamped[slots][:, None], True, solved_masks[slots]
+            )
+            sel[fol_idx] = True
+        report = pricing.price_batch(wcg_batch, rows)
+        partial = np.asarray(report.partial_cost, dtype=np.float64)
+        # shared §4.3 strictness: hits/followers whose all-local baseline
+        # is strictly cheaper flip to the all-ones plan (reprice_clamped)
+        clamped = sel & (no_off < partial)
+        rows[clamped] = True
+        partial = np.where(clamped, no_off, partial)
+
+        new_min_cuts = batch.min_cuts.copy()
+        sel_rows = np.nonzero(sel)[0]
+        # hit/follower result cut = repriced (possibly clamped) cost,
+        # exactly reprice_clamped_priced's min_cut
+        new_min_cuts[sel_rows] = partial[sel_rows]
+        if solve_idx:
+            # representative result keeps the solver's own cut value
+            # unless clamped to the baseline (clamp_no_offloading_priced)
+            new_min_cuts[solve_idx] = np.where(
+                rep_clamped, no_off[solve_idx], solver_cuts
+            )
+    except BaseException:
+        batch.restore(state)
+        raise
+
+    # ---- success: counters, stores, state install (infallible) ---------
+    cache.record_many(hits=len(hit_idx), misses=len(solve_idx))
+    cache.record_many(hits=len(fol_idx))  # followers hit the rep's store
+    for slot, i in enumerate(solve_idx):
+        cache.store(solve_keys[slot], rows[i])
+    batch.commit_step(due, rows, new_min_cuts)
+
+    cache_hit = np.zeros(batch.capacity, dtype=bool)
+    cache_hit[hit_idx] = True
+    cache_hit[fol_idx] = True
+    tick_report = SessionTickReport(
+        steps=batch.steps.copy(),
+        active=batch.active.copy(),
+        repartitioned=due,
+        cache_hit=cache_hit,
+        placements=rows,
+        min_cut=batch.min_cuts.copy(),
+        partial_cost=partial,
+        no_offload_cost=no_off,
+        full_offload_cost=np.asarray(report.full_offload_cost, dtype=np.float64),
+        gain=pricing.vector_gain(no_off, partial),
+        envs=envs,
+        hits=len(hit_idx),
+        solved=len(solve_idx),
+        coalesced=len(fol_idx),
+        due=int(due_idx.size),
+    )
+    if device_telemetry:
+        tick_report.device_summary = pricing.device_price_summary(
+            profile, model, envs, rows, active=batch.active
+        )
+    return tick_report

@@ -7,9 +7,13 @@
                 flush order over per-tenant weights, a strict elastic
                 priority lane, and backpressure on queued bins.
 ``session``   — :class:`BrokerSession`: one user's adaptive loop
-                (paper Fig. 1) with solves routed through the broker.
+                (paper Fig. 1) with solves routed through the broker;
+                :class:`BatchSessionGroup`: K sessions as one
+                array-native SessionBatch ticked vectorized.
 ``workload``  — deterministic seeded multi-user environment walks for
-                tests, benchmarks and demos.
+                tests, benchmarks and demos, plus the vectorized
+                :class:`TrafficGenerator` (Poisson arrivals, geometric
+                churn) feeding batched session groups.
 """
 
 from repro.service.broker import (
@@ -20,12 +24,15 @@ from repro.service.broker import (
     TickReport,
 )
 from repro.service.scheduler import QueueEntry, WeightedFairScheduler
-from repro.service.session import BrokerSession
+from repro.service.session import BatchSessionGroup, BrokerSession
 from repro.service.workload import (
     DEFAULT_REGIMES,
     Regime,
+    TrafficGenerator,
+    TrafficTick,
     WorkloadReport,
     environment_trace,
+    run_batch_workload,
     run_workload,
     user_traces,
 )
@@ -39,10 +46,14 @@ __all__ = [
     "QueueEntry",
     "WeightedFairScheduler",
     "BrokerSession",
+    "BatchSessionGroup",
     "DEFAULT_REGIMES",
     "Regime",
+    "TrafficGenerator",
+    "TrafficTick",
     "WorkloadReport",
     "environment_trace",
+    "run_batch_workload",
     "run_workload",
     "user_traces",
 ]

@@ -55,6 +55,16 @@ service:
   shares and rejections are telemetered per tick
   (:attr:`TickReport.elastic` / :attr:`TickReport.shares` /
   :attr:`TickReport.rejected`).
+* **Batched session groups** — :meth:`OffloadBroker.register_batch`
+  attaches a :class:`~repro.service.session.BatchSessionGroup`: K
+  sessions of a tenant held as ONE
+  :class:`~repro.core.session_batch.SessionBatch` pytree, observed as
+  arrays and resolved per tick by one vectorized
+  :func:`~repro.core.session_batch.tick_sessions` call against the
+  tenant's shared cache — the 10⁵–10⁶-concurrent-user path, with events
+  bit-identical to the per-object sessions above.  Group service
+  latency feeds the scheduler's optional load-adaptive weights
+  (``register(..., adaptive_weight=True)``).
 * **Persistence** — tenant caches snapshot/load as JSON
   (:meth:`OffloadBroker.snapshot` / ``warm_start=`` on
   :meth:`OffloadBroker.register`), so a serving restart replays a known
@@ -164,6 +174,10 @@ class TickReport:
     rejected: int = 0       # backpressure rejections since the last tick
     shares: tuple[tuple[str, int], ...] = ()  # per-tenant requests drained
                             # this tick (name-sorted) — the WFQ split
+    batch_groups: int = 0   # session batch groups ticked
+    batch_sessions: int = 0  # active batched sessions observed this tick
+    batch_hits: int = 0     # batched due-sessions served from cache
+    batch_solved: int = 0   # representative solves for batched sessions
 
 
 @dataclasses.dataclass
@@ -178,6 +192,8 @@ class BrokerTelemetry:
     dispatches: int = 0
     elastic_requests: int = 0
     rejected_requests: int = 0
+    batch_sessions: int = 0
+    batch_solved: int = 0
     max_queue_depth: int = 0
     total_latency_s: float = 0.0
     reports: list[TickReport] = dataclasses.field(default_factory=list)
@@ -192,6 +208,8 @@ class BrokerTelemetry:
         self.dispatches += report.dispatches
         self.elastic_requests += report.elastic
         self.rejected_requests += report.rejected
+        self.batch_sessions += report.batch_sessions
+        self.batch_solved += report.batch_solved
         self.max_queue_depth = max(self.max_queue_depth, report.queue_depth)
         self.total_latency_s += report.latency_s
         self.reports.append(report)
@@ -220,6 +238,8 @@ class BrokerTelemetry:
             "dispatches": self.dispatches,
             "elastic_requests": self.elastic_requests,
             "rejected_requests": self.rejected_requests,
+            "batch_sessions": self.batch_sessions,
+            "batch_solved": self.batch_solved,
             "max_queue_depth": self.max_queue_depth,
             "coalesce_ratio": round(self.coalesce_ratio, 4),
             "hit_rate": round(self.hit_rate, 4),
@@ -286,6 +306,7 @@ class OffloadBroker:
         self.telemetry = BrokerTelemetry()
         self._tenants: dict[str, _Tenant] = {}
         self._scheduler = WeightedFairScheduler(max_queued_bins=max_queued_bins)
+        self._batch_groups: list = []  # BatchSessionGroup, registration order
         self._rejected_since_tick = 0
         self._tick = 0
 
@@ -301,6 +322,7 @@ class OffloadBroker:
         cache_capacity: int = 4096,
         warm_start=None,
         weight: float = 1.0,
+        adaptive_weight: bool = False,
     ) -> _Tenant:
         """Register a served application (or a raw-graph producer).
 
@@ -314,6 +336,12 @@ class OffloadBroker:
         ``weight`` is the tenant's weighted-fair share of a budgeted
         tick (deficit round robin; see
         :class:`~repro.service.scheduler.WeightedFairScheduler`).
+        ``adaptive_weight=True`` additionally opts the tenant into the
+        scheduler's load-adaptive weighting: the broker feeds each
+        tick's per-tenant service latency into an EWMA, and the
+        effective weight scales by inverse recent latency (clamped
+        around ``weight``; see
+        :meth:`~repro.service.scheduler.WeightedFairScheduler.set_adaptive`).
         """
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already registered")
@@ -333,7 +361,49 @@ class OffloadBroker:
             cache.load(warm_start, fingerprint=fingerprint)
         self._tenants[name] = tenant
         self._scheduler.ensure_tenant(name, weight=weight)
+        if adaptive_weight:
+            self._scheduler.set_adaptive(name)
         return tenant
+
+    def register_batch(
+        self,
+        name: str,
+        capacity: int,
+        *,
+        threshold: float = 0.10,
+        min_interval: int = 1,
+        device_telemetry: bool = False,
+    ):
+        """Attach a :class:`~repro.service.session.BatchSessionGroup`.
+
+        ``capacity`` session slots of tenant ``name`` held as one
+        :class:`~repro.core.session_batch.SessionBatch` pytree: the
+        group stages a whole tick of observations as arrays and
+        :meth:`tick` resolves it with ONE vectorized
+        ``tick_sessions`` call against the tenant's shared cache — the
+        10⁵–10⁶-user path.  Groups tick after the request queue drains,
+        ordered by scheduler weight (descending; registration order
+        breaks ties), and each group's service latency feeds the
+        scheduler's load-adaptive weighting when the tenant opted in.
+        """
+        # deferred import: session.py imports the broker module
+        from repro.service.session import BatchSessionGroup
+
+        t = self._tenants[name]
+        if t.profile is None:
+            raise ValueError(
+                f"tenant {name!r} has no profile; batch groups need one"
+            )
+        group = BatchSessionGroup(
+            self,
+            name,
+            capacity=capacity,
+            threshold=threshold,
+            min_interval=min_interval,
+            device_telemetry=device_telemetry,
+        )
+        self._batch_groups.append(group)
+        return group
 
     def set_weight(self, name: str, weight: float) -> None:
         """Adjust a tenant's weighted-fair share for future ticks."""
@@ -468,12 +538,53 @@ class OffloadBroker:
             # materialization is inside the containment: a failing deferred
             # build (bad environment) must re-queue innocents, not drop them
             self._materialize(requests)
-            return self._run_tick(requests, depth, t0)
+            report = self._run_tick(requests, depth)
         except BaseException:
             self._scheduler.requeue(
                 e for e in entries if not e.item.future.done
             )
             raise
+        # batched session groups tick after the request queue: each is one
+        # vectorized tick_sessions call, atomic on its own (a failing group
+        # keeps its staged observation for retry and does not disturb the
+        # already-resolved request futures above)
+        report = self._tick_batches(report)
+        report = dataclasses.replace(report, latency_s=self.clock() - t0)
+        self._rejected_since_tick = 0
+        self.telemetry.record(report)
+        return report
+
+    def _tick_batches(self, report: TickReport) -> TickReport:
+        """Run every staged batch group; fold counts into the report.
+
+        Groups run ordered by current scheduler weight (descending,
+        registration order breaking ties — the WFQ notion of precedence
+        applied at group granularity), and each group's wall time is
+        reported to the scheduler as that tenant's service latency,
+        which drives the load-adaptive weights of opted-in tenants.
+        """
+        staged = [g for g in self._batch_groups if g.pending]
+        if not staged:
+            return report
+        staged.sort(key=lambda g: -self._scheduler.weight(g.tenant))
+        groups = sessions = hits = solved = 0
+        for group in staged:
+            g0 = self.clock()
+            group_report = group._tick()
+            self._scheduler.observe_latency(group.tenant, self.clock() - g0)
+            if group_report is None:
+                continue
+            groups += 1
+            sessions += int(np.count_nonzero(group_report.active))
+            hits += group_report.hits + group_report.coalesced
+            solved += group_report.solved
+        return dataclasses.replace(
+            report,
+            batch_groups=groups,
+            batch_sessions=sessions,
+            batch_hits=hits,
+            batch_solved=solved,
+        )
 
     def _materialize(self, requests: list[_Request]) -> None:
         """Build deferred WCGs: one ``build_batch`` per tenant per tick.
@@ -522,7 +633,7 @@ class OffloadBroker:
         )
 
     def _run_tick(
-        self, requests: list[_Request], depth: int, t0: float
+        self, requests: list[_Request], depth: int
     ) -> TickReport:
         hits = coalesced = 0
         solves: list[_Request] = []
@@ -651,11 +762,11 @@ class OffloadBroker:
             solved=len(solves),
             dispatches=dispatches,
             buckets=tuple(sorted(by_bucket)),
-            latency_s=self.clock() - t0,
+            # latency is stamped by tick() once batch groups have run, so
+            # the injected clock is read exactly twice per tick
+            latency_s=0.0,
             elastic=sum(r.lane == "elastic" for r in requests),
             rejected=self._rejected_since_tick,
             shares=tuple(sorted(shares.items())),
         )
-        self._rejected_since_tick = 0
-        self.telemetry.record(report)
         return report

@@ -26,6 +26,14 @@ the lane *sort* with a real scheduler:
   rejection reply), while a request joining an already-queued bin is
   always admitted — it costs no additional solver work.
 
+* **Load-adaptive weights** (optional, per tenant) — a tenant may opt
+  into inverse recent-latency weighting (:meth:`set_adaptive`): the
+  broker reports each tick's per-tenant service latency, an EWMA tracks
+  it, and the tenant's effective weight scales by mean-latency/own-EWMA
+  (clamped), so a tenant whose ticks keep consuming the solver is
+  automatically damped and light tenants are boosted.  Weights only
+  move between drains, so a drain is still fully deterministic.
+
 The scheduler is transport-agnostic and holds opaque items; the broker
 wraps its requests in :class:`QueueEntry`.
 """
@@ -90,6 +98,7 @@ class WeightedFairScheduler:
         self._deficit: dict[str, float] = {}
         self._priority: deque[QueueEntry] = deque()
         self._bin_counts: dict[tuple[str, Hashable], int] = {}
+        self._adaptive: dict[str, dict] = {}  # load-adaptive weight state
         self._cursor = 0  # rotation position, persisted ACROSS drains
 
     # -- tenants ---------------------------------------------------------
@@ -107,9 +116,81 @@ class WeightedFairScheduler:
         if name not in self._weights and name not in self._queues:
             raise KeyError(f"unknown tenant {name!r}; call ensure_tenant first")
         self._weights[name] = float(weight)
+        adaptive = self._adaptive.get(name)
+        if adaptive is not None:
+            adaptive["base"] = float(weight)
 
     def weight(self, name: str) -> float:
         return self._weights[name]
+
+    # -- load-adaptive weights -------------------------------------------
+    def set_adaptive(
+        self,
+        name: str,
+        *,
+        alpha: float = 0.25,
+        floor: float = 0.25,
+        ceiling: float = 4.0,
+    ) -> None:
+        """Opt ``name`` into load-adaptive weighting.
+
+        The broker (or any driver) reports per-tenant service latency via
+        :meth:`observe_latency`; each report updates an EWMA and
+        recomputes every adaptive tenant's effective weight as::
+
+            base × (mean latency across adaptive tenants) / (own EWMA)
+
+        clamped to ``[base × floor, base × ceiling]`` — inverse
+        recent-latency fairness: a tenant whose work keeps consuming the
+        solver (high service latency) is damped, a light one boosted, so
+        expensive ticks cost share.  Static-weight tenants are
+        untouched, and DRR determinism is preserved (weights only change
+        inside ``observe_latency``, never mid-drain).
+        """
+        if name not in self._weights:
+            raise KeyError(f"unknown tenant {name!r}; call ensure_tenant first")
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError("alpha must be in (0, 1]")
+        if floor <= 0 or ceiling < floor:
+            raise ValueError("need 0 < floor <= ceiling")
+        self._adaptive[name] = {
+            "alpha": float(alpha),
+            "floor": float(floor),
+            "ceiling": float(ceiling),
+            "base": self._weights[name],
+            "ewma": None,
+        }
+
+    def observe_latency(self, name: str, seconds: float) -> None:
+        """Feed one service-latency sample for ``name`` (no-op for
+        tenants without :meth:`set_adaptive`); rebalances all adaptive
+        tenants' weights against each other."""
+        state = self._adaptive.get(name)
+        if state is None:
+            return
+        seconds = max(float(seconds), 0.0)
+        state["ewma"] = (
+            seconds
+            if state["ewma"] is None
+            else state["alpha"] * seconds + (1.0 - state["alpha"]) * state["ewma"]
+        )
+        observed = {
+            n: s for n, s in self._adaptive.items() if s["ewma"] is not None
+        }
+        mean = sum(s["ewma"] for s in observed.values()) / len(observed)
+        for n, s in observed.items():
+            if s["ewma"] <= 0.0 or mean <= 0.0:
+                self._weights[n] = s["base"]
+                continue
+            raw = s["base"] * mean / s["ewma"]
+            self._weights[n] = min(
+                max(raw, s["base"] * s["floor"]), s["base"] * s["ceiling"]
+            )
+
+    def adaptive_state(self, name: str) -> dict | None:
+        """Copy of a tenant's adaptive-weight state (telemetry/tests)."""
+        state = self._adaptive.get(name)
+        return dict(state) if state is not None else None
 
     # -- submission ------------------------------------------------------
     def submit(self, entry: QueueEntry) -> bool:

@@ -11,6 +11,11 @@ the broker's next tick, and :meth:`BrokerSession.drain` commits events
 in observation order — bit-identical to a serial ``observe()`` loop over
 controllers sharing one :class:`~repro.core.placement_cache.PlacementCache`
 (see the broker↔serial parity tests).
+
+:class:`BatchSessionGroup` is the array-native sibling: K sessions of a
+tenant held as one :class:`~repro.core.session_batch.SessionBatch`
+pytree and resolved by the broker in ONE vectorized tick — the path the
+10⁵–10⁶-user scale benchmarks ride.
 """
 
 from __future__ import annotations
@@ -19,11 +24,12 @@ import dataclasses
 from collections import deque
 
 from repro.core.adaptive import AdaptationEvent, AdaptiveController
-from repro.core.cost_models import Environment
+from repro.core.cost_models import EnvArrays, Environment
 from repro.core.graph import WCG
+from repro.core.session_batch import SessionBatch, SessionTickReport, tick_sessions
 from repro.service.broker import OffloadBroker, PlacementFuture
 
-__all__ = ["BrokerSession"]
+__all__ = ["BrokerSession", "BatchSessionGroup"]
 
 
 @dataclasses.dataclass
@@ -132,3 +138,124 @@ class BrokerSession:
     @property
     def history(self) -> list[AdaptationEvent]:
         return self.controller.history
+
+
+class BatchSessionGroup:
+    """K array-native sessions of one tenant, ticked inside the broker.
+
+    The 10⁵–10⁶-user replacement for K :class:`BrokerSession` objects:
+    session state lives in one :class:`~repro.core.session_batch.SessionBatch`
+    pytree, a whole tick's observations arrive as one
+    :class:`~repro.core.cost_models.EnvArrays`, and the broker's
+    :meth:`~repro.service.broker.OffloadBroker.tick` resolves the group
+    with ONE :func:`~repro.core.session_batch.tick_sessions` call — same
+    shared tenant cache, same coalescing/§4.3 semantics, bit-identical
+    events (see the session-batch parity tests).
+
+    Protocol per tick: :meth:`observe` stages the environments (applying
+    arrivals/departures first), ``broker.tick()`` runs the batched tick,
+    :meth:`drain` returns the accumulated
+    :class:`~repro.core.session_batch.SessionTickReport` objects.
+    Created via :meth:`OffloadBroker.register_batch`.
+    """
+
+    def __init__(
+        self,
+        broker: OffloadBroker,
+        tenant: str,
+        *,
+        capacity: int,
+        threshold: float = 0.10,
+        min_interval: int = 1,
+        device_telemetry: bool = False,
+    ):
+        t = broker.tenant(tenant)
+        if t.profile is None:
+            raise ValueError(f"tenant {tenant!r} has no profile/cost model")
+        self.broker = broker
+        self.tenant = tenant
+        self.device_telemetry = device_telemetry
+        self.batch = SessionBatch.create(
+            capacity,
+            t.profile.n,
+            threshold=threshold,
+            min_interval=min_interval,
+        )
+        self._staged: EnvArrays | None = None
+        self._reports: deque[SessionTickReport] = deque()
+
+    def observe(
+        self,
+        envs,
+        *,
+        arrived=None,
+        departed=None,
+    ) -> None:
+        """Stage one tick of observations for all ``capacity`` slots.
+
+        Args:
+          envs:     :class:`EnvArrays` with one row per slot (inactive
+                    rows carry placeholders), or a sequence of
+                    Environments.
+          arrived:  slots (index array or bool mask) activated this tick
+                    — reset to fresh sessions before the tick runs.
+          departed: slots deactivated this tick (applied before
+                    ``arrived``, so a slot can turn over in one tick).
+
+        The staged tick runs at the broker's next
+        :meth:`~repro.service.broker.OffloadBroker.tick`; staging twice
+        without a tick in between is an error (one batch IS one tick's
+        worth of observations).
+        """
+        if self._staged is not None:
+            raise RuntimeError(
+                f"batch group {self.tenant!r} already has a staged "
+                "observation; run broker.tick() first"
+            )
+        if departed is not None:
+            self.batch.deactivate(departed)
+        if arrived is not None:
+            self.batch.activate(arrived)
+        if not isinstance(envs, EnvArrays):
+            envs = EnvArrays.from_envs(envs)
+        if envs.k != self.batch.capacity:
+            raise ValueError(
+                f"envs must carry {self.batch.capacity} rows, got {envs.k}"
+            )
+        self._staged = envs
+
+    def _tick(self) -> SessionTickReport | None:
+        """Run the staged tick (broker-internal).  Atomic: on failure the
+        batch state is untouched and the staged envs are kept, so the
+        next broker tick retries the whole observation."""
+        if self._staged is None:
+            return None
+        t = self.broker.tenant(self.tenant)
+        report = tick_sessions(
+            self.batch,
+            self._staged,
+            profile=t.profile,
+            model=t.cost_model,
+            cache=t.cache,
+            backend=self.broker.backend,
+            buckets=self.broker.buckets,
+            device_telemetry=self.device_telemetry,
+        )
+        self._staged = None
+        self._reports.append(report)
+        return report
+
+    def drain(self) -> list[SessionTickReport]:
+        """Return (and clear) the reports of every completed tick."""
+        reports = list(self._reports)
+        self._reports.clear()
+        return reports
+
+    @property
+    def pending(self) -> int:
+        """Staged-but-unticked observations (0 or 1)."""
+        return int(self._staged is not None)
+
+    @property
+    def active_sessions(self) -> int:
+        return self.batch.active_count

@@ -18,9 +18,10 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.adaptive import AdaptationEvent
-from repro.core.cost_models import Environment
+from repro.core.cost_models import EnvArrays, Environment
+from repro.core.session_batch import SessionTickReport
 from repro.service.broker import OffloadBroker
-from repro.service.session import BrokerSession
+from repro.service.session import BatchSessionGroup, BrokerSession
 
 __all__ = [
     "Regime",
@@ -29,6 +30,9 @@ __all__ = [
     "user_traces",
     "WorkloadReport",
     "run_workload",
+    "TrafficTick",
+    "TrafficGenerator",
+    "run_batch_workload",
 ]
 
 
@@ -158,3 +162,176 @@ def run_workload(
             events[u].extend(session.drain())
     assert all(s.pending == 0 for s in sessions)
     return WorkloadReport(events=events, traces=traces, ticks=steps)
+
+
+# ----------------------------------------------------------------------
+# Array-native traffic: Poisson arrivals + geometric churn over a fixed
+# capacity of session slots, vectorized regime walks — the 10⁵–10⁶-user
+# feed for BatchSessionGroup ticks.
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficTick:
+    """One tick of generated traffic over all capacity slots.
+
+    ``envs`` carries a row for every slot — inactive rows hold a
+    harmless placeholder environment (bandwidth = speedup = 1) that the
+    batched tick prices but never acts on (inactive sessions are never
+    due).  ``arrived``/``departed`` are this tick's churn, already
+    reflected in ``active``.
+    """
+
+    envs: EnvArrays
+    active: np.ndarray    # (capacity,) bool — live after this tick's churn
+    arrived: np.ndarray   # (capacity,) bool — slots activated this tick
+    departed: np.ndarray  # (capacity,) bool — slots freed this tick
+
+
+class TrafficGenerator:
+    """Seeded vectorized traffic source for a fixed-capacity slot pool.
+
+    Per :meth:`step`, in order: geometric churn (each live session
+    departs with probability ``churn``), Poisson(``arrival_rate``)
+    arrivals filling the lowest free slots (plus ``initial`` sessions on
+    the first step), then one vectorized regime-walk update — ongoing
+    sessions count down a dwell timer and hop to an adjacent regime when
+    it expires, mirroring :func:`environment_trace`'s walk, and
+    observations carry the same 2% relative measurement noise.
+
+    Determinism: every random draw is a fixed-size (capacity,) array
+    each step, so the generated traffic is a pure function of
+    ``(seed, capacity, step)`` — independent of how occupancy evolves —
+    and replays bit-identically (asserted by the churn determinism
+    test).
+    """
+
+    def __init__(
+        self,
+        capacity: int,
+        *,
+        seed: int = 0,
+        regimes: Sequence[Regime] = DEFAULT_REGIMES,
+        arrival_rate: float = 1.0,
+        churn: float = 0.05,
+        initial: int | None = None,
+        dwell: tuple[int, int] = (2, 5),
+        rel_noise: float = 0.02,
+    ):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        if not (0.0 <= churn < 1.0):
+            raise ValueError("churn must be in [0, 1)")
+        self.capacity = int(capacity)
+        self.regimes = tuple(regimes)
+        self.arrival_rate = float(arrival_rate)
+        self.churn = float(churn)
+        self.initial = (
+            min(int(initial), capacity) if initial is not None else capacity // 2
+        )
+        self.dwell = (int(dwell[0]), int(dwell[1]))
+        self.rel_noise = float(rel_noise)
+        self.rng = np.random.default_rng(seed)
+        self._band = np.array([r.bandwidth for r in self.regimes])
+        self._speed = np.array([r.speedup for r in self.regimes])
+        self._active = np.zeros(self.capacity, dtype=bool)
+        self._regime = np.zeros(self.capacity, dtype=np.int64)
+        self._dwell_left = np.zeros(self.capacity, dtype=np.int64)
+        self._step = 0
+
+    def step(self) -> TrafficTick:
+        cap, rng = self.capacity, self.rng
+        n_regimes = len(self.regimes)
+
+        # geometric churn: each live session departs with prob `churn`
+        departed = self._active & (rng.random(cap) < self.churn)
+        self._active &= ~departed
+
+        # Poisson arrivals fill the lowest free slots (first step also
+        # seeds `initial` sessions so the pool starts warm)
+        n_arrivals = int(rng.poisson(self.arrival_rate))
+        if self._step == 0:
+            n_arrivals += self.initial
+        free = np.nonzero(~self._active)[0]
+        arrived = np.zeros(cap, dtype=bool)
+        arrived[free[:n_arrivals]] = True
+
+        # fixed-size draws keep the stream occupancy-independent
+        arr_regime = rng.integers(n_regimes, size=cap)
+        arr_dwell = rng.integers(self.dwell[0], self.dwell[1] + 1, size=cap)
+        hop_dir = rng.choice((-1, 1), size=cap)
+        hop_dwell = rng.integers(self.dwell[0], self.dwell[1] + 1, size=cap)
+        noise = 1.0 + self.rel_noise * rng.standard_normal((cap, 2))
+
+        self._regime = np.where(arrived, arr_regime, self._regime)
+        self._dwell_left = np.where(arrived, arr_dwell, self._dwell_left)
+        self._active |= arrived
+
+        # ongoing sessions walk: dwell counts down, expiry hops ±1 regime
+        ongoing = self._active & ~arrived
+        self._dwell_left = np.where(
+            ongoing, self._dwell_left - 1, self._dwell_left
+        )
+        hop = ongoing & (self._dwell_left <= 0)
+        self._regime = np.where(
+            hop,
+            np.clip(self._regime + hop_dir, 0, n_regimes - 1),
+            self._regime,
+        )
+        self._dwell_left = np.where(hop, hop_dwell, self._dwell_left)
+
+        band = np.where(
+            self._active, self._band[self._regime] * noise[:, 0], 1.0
+        )
+        speed = np.where(
+            self._active, self._speed[self._regime] * noise[:, 1], 1.0
+        )
+        envs = EnvArrays(
+            bandwidth_up=band,
+            bandwidth_down=band.copy(),
+            speedup=speed,
+            p_compute=np.full(cap, 0.9),
+            p_idle=np.full(cap, 0.3),
+            p_transfer=np.full(cap, 1.3),
+        )
+        self._step += 1
+        return TrafficTick(
+            envs=envs,
+            active=self._active.copy(),
+            arrived=arrived,
+            departed=departed,
+        )
+
+
+def run_batch_workload(
+    broker: OffloadBroker,
+    group: BatchSessionGroup,
+    *,
+    steps: int,
+    seed: int = 0,
+    regimes: Sequence[Regime] = DEFAULT_REGIMES,
+    arrival_rate: float = 1.0,
+    churn: float = 0.05,
+    initial: int | None = None,
+) -> list[SessionTickReport]:
+    """Drive a batch session group through seeded churning traffic.
+
+    The batched sibling of :func:`run_workload`: one
+    :class:`TrafficGenerator` step stages the whole pool's observations
+    (arrivals and departures included), one ``broker.tick()`` resolves
+    them.  Returns the per-tick
+    :class:`~repro.core.session_batch.SessionTickReport` list.
+    """
+    gen = TrafficGenerator(
+        group.batch.capacity,
+        seed=seed,
+        regimes=regimes,
+        arrival_rate=arrival_rate,
+        churn=churn,
+        initial=initial,
+    )
+    for _ in range(steps):
+        tick = gen.step()
+        group.observe(tick.envs, arrived=tick.arrived, departed=tick.departed)
+        broker.tick()
+    return group.drain()
