@@ -13,13 +13,17 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
     scale           → batched session engine: ticks/s and µs/user at
                       U ∈ {1k, 10k, 100k} vs the per-object baseline
                       (``REPRO_SCALE_U=1000`` for the CI smoke subset)
+    faults          → fault-tolerance overhead: throughput/p99/degraded
+                      fraction at injected fault rates {0%, 1%, 10%}
+                      (``REPRO_FAULTS_STEPS=3`` for the CI smoke subset)
     roofline        → §Roofline table from the dry-run artifact
 
 The mcop_backends rows are additionally appended to ``BENCH_mcop.json``,
 the broker rows to ``BENCH_broker.json``, the pipeline rows to
-``BENCH_pipeline.json`` and the scale rows to ``BENCH_scale.json``
-(bounded trajectories of runs), so backend/batching/serving speedups can
-be tracked across commits; the broker, pipeline and scale artifacts are
+``BENCH_pipeline.json``, the scale rows to ``BENCH_scale.json`` and the
+faults rows to ``BENCH_faults.json`` (bounded trajectories of runs), so
+backend/batching/serving/resilience numbers can be tracked across
+commits; the broker, pipeline, scale and faults artifacts are
 smoke-checked after every append.
 """
 
@@ -28,6 +32,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import re
 import sys
 import time
 
@@ -35,6 +40,7 @@ from benchmarks import (
     broker,
     complexity,
     compression_ablation,
+    faults,
     gains,
     mcop_backends,
     optimality_gap,
@@ -51,6 +57,7 @@ MODULES = {
     "pipeline": pipeline,
     "broker": broker,
     "scale": scale,
+    "faults": faults,
     "compression_ablation": compression_ablation,
     "roofline": roofline,
 }
@@ -63,6 +70,7 @@ _TRAJECTORY_PATH = _REPO_ROOT / "BENCH_mcop.json"
 _BROKER_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_broker.json"
 _PIPELINE_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_pipeline.json"
 _SCALE_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_scale.json"
+_FAULTS_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_faults.json"
 _TRAJECTORY_KEEP = 50  # bounded history of runs
 
 
@@ -146,6 +154,28 @@ def _smoke_check_trajectory(path: pathlib.Path, benchmark: str) -> None:
                 raise RuntimeError(
                     f"{path.name}: batch row missing throughput figures: {row!r}"
                 )
+    if benchmark == "faults":
+        # PR-7 acceptance: all three rate rows present, and light chaos
+        # (1% fault rate) holds throughput within 2x of the fault-free
+        # pass — graceful degradation must not cost an order of magnitude
+        by_name = {row["name"]: row for row in last["rows"]}
+        req_s = {}
+        for tag in ("rate0", "rate1pct", "rate10pct"):
+            row = by_name.get(f"faults/{tag}")
+            if row is None:
+                raise RuntimeError(f"{path.name}: last run lacks a faults/{tag} row")
+            m = re.search(r"req_s=(\d+(?:\.\d+)?)", row["derived"])
+            if m is None:
+                raise RuntimeError(
+                    f"{path.name}: faults/{tag} derived lacks req_s=: {row!r}"
+                )
+            req_s[tag] = float(m.group(1))
+        if req_s["rate1pct"] < 0.5 * req_s["rate0"]:
+            raise RuntimeError(
+                f"{path.name}: throughput at 1% faults "
+                f"({req_s['rate1pct']:.0f} req/s) fell past 2x of fault-free "
+                f"({req_s['rate0']:.0f} req/s)"
+            )
 
 
 def main(argv=None) -> int:
@@ -176,6 +206,10 @@ def main(argv=None) -> int:
                 _append_trajectory(rows, _SCALE_TRAJECTORY_PATH, "scale")
                 _smoke_check_trajectory(_SCALE_TRAJECTORY_PATH, "scale")
                 print("scale/smoke,0.00,BENCH_scale.json ok", flush=True)
+            elif name == "faults":
+                _append_trajectory(rows, _FAULTS_TRAJECTORY_PATH, "faults")
+                _smoke_check_trajectory(_FAULTS_TRAJECTORY_PATH, "faults")
+                print("faults/smoke,0.00,BENCH_faults.json ok", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}/ERROR,0.00,{e!r}", flush=True)

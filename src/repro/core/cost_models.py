@@ -43,11 +43,12 @@ from typing import NamedTuple, Sequence
 import jax
 import numpy as np
 
-from repro.core.graph import WCG, WCGBatch
+from repro.core.graph import WCG, WCGBatch, NonFiniteWeightError
 
 __all__ = [
     "Environment",
     "EnvArrays",
+    "validate_env_finite",
     "AppProfile",
     "CostModel",
     "ResponseTimeModel",
@@ -137,6 +138,40 @@ class EnvArrays(NamedTuple):
         batched tick flushes through ``solve_envs``."""
         idx = np.asarray(indices)
         return EnvArrays(*(np.asarray(f)[idx] for f in self))
+
+
+def validate_env_finite(envs: EnvArrays) -> None:
+    """Reject NaN/Inf environment inputs, naming the offending row.
+
+    Host-only (a no-op when any column is a traced/device array):
+    corrupted measurements used to flow silently into the weight math
+    and poison every graph of the batch; now the first host boundary
+    (``CostModel.build_batch``, ``solve_envs``) raises
+    :class:`~repro.core.graph.NonFiniteWeightError` instead.  The cheap
+    aggregate probe runs every call; the per-row scan only on failure.
+    """
+    if not all(isinstance(col, np.ndarray) for col in envs):
+        return
+    probe = sum(float(col.sum()) for col in envs)
+    if np.isfinite(probe):
+        return
+    finite = np.ones(envs.k, dtype=bool)
+    for col in envs:
+        finite &= np.isfinite(col)
+    rows = np.nonzero(~finite)[0]
+    first = int(rows[0])
+    fields = [
+        name
+        for name, col in zip(envs._fields, envs)
+        if not np.isfinite(col[first])
+    ]
+    more = "" if rows.size <= 1 else f" (+{rows.size - 1} more row(s))"
+    raise NonFiniteWeightError(
+        f"non-finite environment input: row {first} "
+        f"({', '.join(f'{f}={float(getattr(envs, f)[first])!r}' for f in fields)})"
+        f"{more}; rejecting before it corrupts the weight math",
+        rows=rows,
+    )
 
 
 @dataclasses.dataclass
@@ -259,6 +294,7 @@ class CostModel:
             if isinstance(envs, EnvArrays)
             else EnvArrays.from_envs(envs, dtype)
         )
+        validate_env_finite(env_arrays)
         wl, wc, adj = self.batch_weights(
             np.asarray(profile.t_local, dtype),
             np.asarray(profile.data_in, dtype),

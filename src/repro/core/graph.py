@@ -37,6 +37,7 @@ import numpy as np
 __all__ = [
     "WCG",
     "WCGBatch",
+    "NonFiniteWeightError",
     "linear_graph",
     "loop_graph",
     "tree_graph",
@@ -46,6 +47,21 @@ __all__ = [
     "face_recognition_graph",
     "TOPOLOGY_BUILDERS",
 ]
+
+
+class NonFiniteWeightError(ValueError):
+    """NaN/Inf detected in WCG weights or environment inputs.
+
+    Corruption used to propagate silently into the solver (Stoer–Wagner
+    happily partitions a NaN graph into garbage); now it is rejected at
+    the first host boundary with the offending rows named, so the
+    resilience layer can treat it as a transient failure and retry on
+    clean inputs.  ``rows`` carries the offending batch-row indices.
+    """
+
+    def __init__(self, message: str, *, rows=()):
+        super().__init__(message)
+        self.rows = tuple(int(r) for r in rows)
 
 
 @dataclasses.dataclass
@@ -239,6 +255,38 @@ class WCGBatch:
     def m(self) -> int:
         return int(self.w_local.shape[1])
 
+    def validate_finite(self) -> None:
+        """Reject NaN/Inf weights, naming the offending batch rows.
+
+        Host-only (a no-op for traced/device leaves): the cheap aggregate
+        probe runs on every call, the per-row scan only on failure.
+        Raises :class:`NonFiniteWeightError`.
+        """
+        arrays = (self.w_local, self.w_cloud, self.adj)
+        if not all(isinstance(a, np.ndarray) for a in arrays):
+            return
+        probe = (
+            float(self.w_local.sum())
+            + float(self.w_cloud.sum())
+            + float(self.adj.sum())
+        )
+        if np.isfinite(probe):
+            return
+        k = int(self.w_local.shape[0])
+        bad = ~(
+            np.isfinite(self.w_local).all(axis=-1)
+            & np.isfinite(self.w_cloud).all(axis=-1)
+            & np.isfinite(self.adj.reshape(k, -1)).all(axis=-1)
+        )
+        rows = np.nonzero(bad)[0]
+        shown = ", ".join(str(int(r)) for r in rows[:8])
+        more = "" if rows.size <= 8 else f" (+{rows.size - 8} more)"
+        raise NonFiniteWeightError(
+            f"non-finite WCG weights in batch row(s) {shown}{more}; "
+            "rejecting before the solver partitions garbage",
+            rows=rows,
+        )
+
     # ------------------------------------------------------------------
     @classmethod
     def pack(
@@ -253,7 +301,11 @@ class WCGBatch:
         dtype=np.float64,
     ) -> "WCGBatch":
         """Stack already-batched ``(k, n[, n])`` arrays, zero-padding to
-        ``m`` vertices (padding is pinned with zero weights/edges)."""
+        ``m`` vertices (padding is pinned with zero weights/edges).
+
+        Rejects NaN/Inf weights (:class:`NonFiniteWeightError`) — the
+        host pack is the first boundary corruption can be named at.
+        """
         w_local = np.asarray(w_local, dtype)
         k, n = w_local.shape
         m = n if m is None else int(m)
@@ -267,7 +319,9 @@ class WCGBatch:
         wc[:, :n] = w_cloud
         a[:, :n, :n] = adj
         pin[:, :n] = ~np.asarray(offloadable, dtype=bool)
-        return cls(wl, wc, a, pin, n_valid=(n,) * k, names=tuple(names))
+        batch = cls(wl, wc, a, pin, n_valid=(n,) * k, names=tuple(names))
+        batch.validate_finite()
+        return batch
 
     @classmethod
     def from_wcgs(

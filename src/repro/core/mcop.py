@@ -674,13 +674,19 @@ def solve_envs(
     differently than the build-f64-then-cast object path — equal-cost
     placements either way).
     """
-    from repro.core.cost_models import EnvArrays  # deferred: no import cycle
+    from repro.core.cost_models import (  # deferred: no import cycle
+        EnvArrays,
+        validate_env_finite,
+    )
 
     if not isinstance(envs, EnvArrays):
-        envs = list(envs)
-    k = envs.k if isinstance(envs, EnvArrays) else len(envs)
+        envs = EnvArrays.from_envs(list(envs))
+    k = envs.k
     if k == 0:
         return []
+    # corrupted environments must be named here, not silently solved
+    # (NaN weights partition into garbage) — see NonFiniteWeightError
+    validate_env_finite(envs)
     if backend == "reference":
         return [mcop_reference(g) for g in model.build_batch(profile, envs).to_wcgs()]
     if backend not in ("jax", "pallas"):

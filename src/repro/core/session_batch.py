@@ -299,6 +299,11 @@ class SessionTickReport:
     coalesced: int               # same-bin followers folded into a solve
     due: int                     # sessions repartitioned this tick
     device_summary: dict | None = None  # fused device telemetry (optional)
+    # fault-tolerance (resilient ticks only; see tick_sessions(faults=))
+    degraded: np.ndarray | None = None  # (k,) bool — rows served a fallback
+    retries: int = 0             # solve-flush retries performed this tick
+    faults: int = 0              # injected/observed fault events this tick
+    breaker_trips: int = 0       # circuit-breaker open transitions
 
     @property
     def k(self) -> int:
@@ -357,6 +362,10 @@ def tick_sessions(
     backend: str = "jax",
     buckets: Sequence[int] = DEFAULT_BUCKETS,
     device_telemetry: bool = False,
+    faults=None,
+    resilience=None,
+    tick: int = 0,
+    sleep=None,
 ) -> SessionTickReport:
     """One broker tick over all K sessions of ``batch``.
 
@@ -389,7 +398,32 @@ def tick_sessions(
     Atomic: any failure (solver error, bad environment) restores the
     batch to its pre-tick state and re-raises — no events, no counter or
     cache mutations; retry the whole tick.
+
+    Resilient mode (``faults``/``resilience``, wired by the broker's
+    :meth:`~repro.service.broker.OffloadBroker.tick` when it carries a
+    :class:`~repro.service.resilience.ResiliencePolicy`): the solve
+    flush retries with backoff under the optional circuit breaker, and
+    a flush that exhausts its retries *degrades instead of raising* —
+    every due miss row is served a fallback mask (stale cached bin if
+    one exists, else the §4.3 all-local plan), flagged in
+    ``report.degraded``, and its drift anchor is rolled back so the
+    session re-partitions on the next clean tick (convergence once the
+    fault storm ends, asserted by the chaos suite).  ``tick`` keys the
+    deterministic injector; ``sleep`` charges backoff/latency time to
+    the caller's clock.  Pricing failures still restore-and-raise (the
+    broker contains them to the group).
     """
+    if faults is not None or resilience is not None:
+        # deferred: the fault vocabulary lives in the service layer
+        from repro.service.faults import InjectedFault, poison_envs
+    attempts = resilience.retry.attempts if resilience is not None else 1
+    breaker = resilience.breaker if resilience is not None else None
+    n_retries = n_faults = n_trips = 0
+
+    def _charge(seconds: float) -> None:
+        if sleep is not None and seconds > 0:
+            sleep(seconds)
+
     state = batch.checkpoint()
     try:
         due = batch.begin_step(envs)
@@ -411,7 +445,16 @@ def tick_sessions(
         rep_slot: dict[tuple, int] = {}
         for row, i in enumerate(due_idx):
             key = tuple(int(v) for v in keys[row])
-            mask = cache.lookup(key, expected_n=n)
+            lost_load = False
+            if faults is not None:
+                d = faults.decide("cache_load", tick, int(i))
+                if d.fires:
+                    n_faults += 1
+                    if d.kind == "latency":
+                        _charge(d.delay_s)
+                    else:
+                        lost_load = True  # probe discarded: treat as miss
+            mask = None if lost_load else cache.lookup(key, expected_n=n)
             if mask is not None:
                 hit_idx.append(int(i))
                 hit_masks.append(mask)
@@ -426,17 +469,68 @@ def tick_sessions(
                 fol_slot.append(slot)
 
         # ---- stage 2: ONE solve flush for the distinct-bin misses ------
-        solved = (
-            solve_envs(
-                profile,
-                model,
-                envs.take(solve_idx),
-                backend=backend,
-                buckets=buckets,
-            )
-            if solve_idx
-            else []
-        )
+        # Resilient mode retries the flush (injector consulted per
+        # attempt, breaker picks the effective backend); exhaustion
+        # QUARANTINES the flush: every miss row degrades to a fallback
+        # mask below instead of aborting the whole tick.
+        solved: list | None = [] if not solve_idx else None
+        if solve_idx:
+            sub = envs.take(solve_idx)
+            for attempt in range(attempts):
+                if attempt:
+                    n_retries += 1
+                    _charge(resilience.retry.backoff(attempt - 1))
+                eff = (
+                    breaker.backend(backend, tick)
+                    if breaker is not None
+                    else backend
+                )
+                use = sub
+                try:
+                    if faults is not None:
+                        d = faults.decide("solve", tick, attempt)
+                        if d.fires:
+                            n_faults += 1
+                            if d.kind == "latency":
+                                _charge(d.delay_s)
+                            elif d.kind == "error":
+                                raise InjectedFault("solve", tick, attempt)
+                            else:
+                                use = poison_envs(sub)
+                    out = solve_envs(
+                        profile, model, use, backend=eff, buckets=buckets
+                    )
+                    if not all(np.isfinite(r.min_cut) for r in out):
+                        raise RuntimeError(
+                            "non-finite min_cut from solve flush"
+                        )
+                    if breaker is not None:
+                        breaker.record_success(eff)
+                    solved = out
+                    break
+                except Exception:
+                    if breaker is not None and breaker.record_failure(
+                        eff, tick
+                    ):
+                        n_trips += 1
+                    if resilience is None:
+                        raise
+        deg_idx: list[int] = []
+        if solved is None:
+            # flush quarantined: reps AND their followers fall back to
+            # the stale cached bin (uncounted probe) or the §4.3
+            # all-local plan; their drift anchors roll back after commit
+            # so each retries on the next clean tick
+            deg_idx = solve_idx + fol_idx
+            deg_keys = solve_keys + [solve_keys[s] for s in fol_slot]
+            deg_masks = []
+            for key in deg_keys:
+                m = cache.lookup(key, expected_n=n)
+                deg_masks.append(
+                    np.ones(n, dtype=bool) if m is None else m
+                )
+            solve_idx, solve_keys, fol_idx, fol_slot = [], [], [], []
+            solved = []
         solver_cuts = np.array([r.min_cut for r in solved], dtype=np.float64)
         solved_masks = (
             np.stack([r.local_mask for r in solved]).astype(bool)
@@ -473,7 +567,36 @@ def tick_sessions(
                 rep_clamped[slots][:, None], True, solved_masks[slots]
             )
             sel[fol_idx] = True
-        report = pricing.price_batch(wcg_batch, rows)
+        if deg_idx:
+            # quarantined rows price exactly like hit rows: the shared
+            # §4.3 select below clamps a fallback that is worse than
+            # all-local onto the all-ones plan
+            rows[deg_idx] = np.stack(deg_masks)
+            sel[deg_idx] = True
+        report = None
+        for attempt in range(attempts):
+            if attempt:
+                n_retries += 1
+                _charge(resilience.retry.backoff(attempt - 1))
+            try:
+                if faults is not None:
+                    d = faults.decide("pricing", tick, attempt)
+                    if d.fires:
+                        n_faults += 1
+                        if d.kind == "latency":
+                            _charge(d.delay_s)
+                        else:
+                            raise InjectedFault("pricing", tick, attempt)
+                report = pricing.price_batch(wcg_batch, rows)
+                break
+            except Exception:
+                if resilience is None:
+                    raise
+        if report is None:
+            # pricing exhausted its retries: without prices no honest
+            # event can be emitted — restore and let the broker contain
+            # the failure to this group (staged observation retries)
+            raise RuntimeError("pricing exhausted retries; tick aborted")
         partial = np.asarray(report.partial_cost, dtype=np.float64)
         # shared §4.3 strictness: hits/followers whose all-local baseline
         # is strictly cheaper flip to the all-ones plan (reprice_clamped)
@@ -497,11 +620,40 @@ def tick_sessions(
         raise
 
     # ---- success: counters, stores, state install (infallible) ---------
-    cache.record_many(hits=len(hit_idx), misses=len(solve_idx))
+    # degraded rows count as misses (they did miss; the fallback is a
+    # served answer, not a cache hit) and never store
+    cache.record_many(
+        hits=len(hit_idx), misses=len(solve_idx) + len(deg_idx)
+    )
     cache.record_many(hits=len(fol_idx))  # followers hit the rep's store
     for slot, i in enumerate(solve_idx):
+        if faults is not None:
+            d = faults.decide("cache_store", tick, slot)
+            if d.fires:
+                n_faults += 1
+                if d.kind == "latency":
+                    _charge(d.delay_s)
+                else:
+                    continue  # store dropped: the bin re-solves later
         cache.store(solve_keys[slot], rows[i])
     batch.commit_step(due, rows, new_min_cuts)
+    degraded_rows = None
+    if deg_idx:
+        # roll the quarantined sessions' decision state back to the
+        # pre-tick checkpoint (clock keeps ticking): the drift test
+        # re-fires next tick, so they converge once faults stop
+        idx = np.asarray(deg_idx, dtype=np.int64)
+        chk = dict(zip(_LEAF_FIELDS, state))
+        for f in (
+            "anchor_up",
+            "anchor_down",
+            "anchor_speedup",
+            "steps_since",
+            "has_partition",
+        ):
+            getattr(batch, f)[idx] = chk[f][idx]
+        degraded_rows = np.zeros(batch.capacity, dtype=bool)
+        degraded_rows[idx] = True
 
     cache_hit = np.zeros(batch.capacity, dtype=bool)
     cache_hit[hit_idx] = True
@@ -522,6 +674,10 @@ def tick_sessions(
         solved=len(solve_idx),
         coalesced=len(fol_idx),
         due=int(due_idx.size),
+        degraded=degraded_rows,
+        retries=n_retries,
+        faults=n_faults,
+        breaker_trips=n_trips,
     )
     if device_telemetry:
         tick_report.device_summary = pricing.device_price_summary(

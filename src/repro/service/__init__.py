@@ -10,6 +10,12 @@
                 (paper Fig. 1) with solves routed through the broker;
                 :class:`BatchSessionGroup`: K sessions as one
                 array-native SessionBatch ticked vectorized.
+``faults``    — :class:`FaultInjector`: seeded deterministic chaos
+                (pure function of seed/site/tick/index) for the fault
+                sites the broker tick exposes.
+``resilience``— :class:`ResiliencePolicy`: retry/backoff, per-request
+                deadlines, pallas→jax→reference circuit breaker, and
+                graceful degradation to §4.3-safe fallback placements.
 ``workload``  — deterministic seeded multi-user environment walks for
                 tests, benchmarks and demos, plus the vectorized
                 :class:`TrafficGenerator` (Poisson arrivals, geometric
@@ -22,6 +28,21 @@ from repro.service.broker import (
     OffloadBroker,
     PlacementFuture,
     TickReport,
+)
+from repro.service.faults import (
+    FAULT_KINDS,
+    FAULT_SITES,
+    FaultDecision,
+    FaultInjector,
+    InjectedFault,
+    ScriptedFaultInjector,
+)
+from repro.service.resilience import (
+    BACKEND_ESCALATION,
+    CircuitBreaker,
+    InjectedClock,
+    ResiliencePolicy,
+    RetryPolicy,
 )
 from repro.service.scheduler import QueueEntry, WeightedFairScheduler
 from repro.service.session import BatchSessionGroup, BrokerSession
@@ -43,6 +64,17 @@ __all__ = [
     "OffloadBroker",
     "PlacementFuture",
     "TickReport",
+    "FAULT_KINDS",
+    "FAULT_SITES",
+    "FaultDecision",
+    "FaultInjector",
+    "InjectedFault",
+    "ScriptedFaultInjector",
+    "BACKEND_ESCALATION",
+    "CircuitBreaker",
+    "InjectedClock",
+    "ResiliencePolicy",
+    "RetryPolicy",
     "QueueEntry",
     "WeightedFairScheduler",
     "BrokerSession",

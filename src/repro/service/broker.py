@@ -65,6 +65,21 @@ service:
   bit-identical to the per-object sessions above.  Group service
   latency feeds the scheduler's optional load-adaptive weights
   (``register(..., adaptive_weight=True)``).
+* **Fault tolerance** (opt-in) — constructed with a
+  :class:`~repro.service.resilience.ResiliencePolicy` (and optionally a
+  seeded :class:`~repro.service.faults.FaultInjector` for chaos
+  testing), the tick becomes a failure domain per (bin, bucket): solver
+  dispatches retry with exponential backoff under a per-backend circuit
+  breaker (pallas → jax → reference), a flush that exhausts its retries
+  quarantines ONLY its own bucket's requests — served a *fallback
+  placement* (stale cached bin if available, else the paper's §4.3
+  no-offload plan) marked :attr:`BrokerReply.degraded`, or re-queued —
+  while healthy buckets commit normally; per-request deadlines resolve
+  overdue queued futures as :attr:`BrokerReply.timed_out`; and
+  :meth:`OffloadBroker.drain` resolves abandoned futures at shutdown
+  instead of stranding them.  With ``resilience=None`` (default) the
+  legacy contract is preserved bit-identically: failures re-queue
+  unresolved requests and re-raise.
 * **Persistence** — tenant caches snapshot/load as JSON
   (:meth:`OffloadBroker.snapshot` / ``warm_start=`` on
   :meth:`OffloadBroker.register`), so a serving restart replays a known
@@ -77,6 +92,7 @@ service:
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable, Sequence
 
@@ -91,6 +107,8 @@ from repro.core.placement_cache import (
     PlacementCache,
     profile_fingerprint,
 )
+from repro.service.faults import FaultInjector, InjectedFault, poison_batch
+from repro.service.resilience import ResiliencePolicy
 from repro.service.scheduler import QueueEntry, WeightedFairScheduler
 
 __all__ = [
@@ -117,7 +135,16 @@ class BrokerReply:
     ``rejected`` marks a backpressure rejection (the scheduler's queued
     -bin cap was reached); a rejected reply carries ``result=None`` and
     resolves at submit time, so callers can retry a later tick without
-    waiting.
+    waiting.  A broker shutdown (:meth:`OffloadBroker.drain`) also
+    resolves abandoned futures as rejected.
+
+    ``degraded`` marks a graceful-degradation reply (resilient brokers
+    only): the solve exhausted its retries, so ``result`` is a *fallback
+    placement* — the stale cached bin if one existed, else the paper's
+    §4.3 no-offload plan — always valid, possibly not optimal.
+
+    ``timed_out`` marks a deadline expiry: the request was still queued
+    past its deadline tick and carries ``result=None``.
     """
 
     result: MCOPResult | None
@@ -125,6 +152,8 @@ class BrokerReply:
     coalesced: bool
     tick: int
     rejected: bool = False
+    degraded: bool = False
+    timed_out: bool = False
 
 
 class PlacementFuture:
@@ -178,6 +207,12 @@ class TickReport:
     batch_sessions: int = 0  # active batched sessions observed this tick
     batch_hits: int = 0     # batched due-sessions served from cache
     batch_solved: int = 0   # representative solves for batched sessions
+    # fault-tolerance counters (resilient brokers; all zero otherwise)
+    faults: int = 0         # injected/observed fault events this tick
+    retries: int = 0        # dispatch retries performed this tick
+    breaker_trips: int = 0  # circuit-breaker open transitions this tick
+    degraded: int = 0       # fallback-placement replies this tick
+    timed_out: int = 0      # futures resolved as timed-out this tick
 
 
 @dataclasses.dataclass
@@ -194,6 +229,11 @@ class BrokerTelemetry:
     rejected_requests: int = 0
     batch_sessions: int = 0
     batch_solved: int = 0
+    faults: int = 0
+    retries: int = 0
+    breaker_trips: int = 0
+    degraded_replies: int = 0
+    timed_out_requests: int = 0
     max_queue_depth: int = 0
     total_latency_s: float = 0.0
     reports: list[TickReport] = dataclasses.field(default_factory=list)
@@ -210,6 +250,11 @@ class BrokerTelemetry:
         self.rejected_requests += report.rejected
         self.batch_sessions += report.batch_sessions
         self.batch_solved += report.batch_solved
+        self.faults += report.faults
+        self.retries += report.retries
+        self.breaker_trips += report.breaker_trips
+        self.degraded_replies += report.degraded
+        self.timed_out_requests += report.timed_out
         self.max_queue_depth = max(self.max_queue_depth, report.queue_depth)
         self.total_latency_s += report.latency_s
         self.reports.append(report)
@@ -240,6 +285,11 @@ class BrokerTelemetry:
             "rejected_requests": self.rejected_requests,
             "batch_sessions": self.batch_sessions,
             "batch_solved": self.batch_solved,
+            "faults": self.faults,
+            "retries": self.retries,
+            "breaker_trips": self.breaker_trips,
+            "degraded_replies": self.degraded_replies,
+            "timed_out_requests": self.timed_out_requests,
             "max_queue_depth": self.max_queue_depth,
             "coalesce_ratio": round(self.coalesce_ratio, 4),
             "hit_rate": round(self.hit_rate, 4),
@@ -265,11 +315,32 @@ class _Request:
     future: PlacementFuture
     env: Environment | None = None
     lane: str = "user"
+    expires: int | None = None  # absolute tick deadline (None = no deadline)
 
     @property
     def n(self) -> int:
         """Graph size of this request (profile size while deferred)."""
         return self.g.n if self.g is not None else self.tenant.profile.n
+
+
+@dataclasses.dataclass
+class _TickCtx:
+    """One tick's fault/resilience scratchpad (resilient brokers only)."""
+
+    injector: FaultInjector | None
+    policy: ResiliencePolicy | None
+    sleep: Callable[[float], None]
+    entry_of: dict[int, QueueEntry] = dataclasses.field(default_factory=dict)
+    solve_seq: int = 0          # per-tick dispatch-attempt counter ("solve" site)
+    price_seq: int = 0          # per-tick pricing-attempt counter ("pricing" site)
+    faults: int = 0
+    retries: int = 0
+    breaker_trips: int = 0
+    degraded: int = 0
+
+    @property
+    def attempts(self) -> int:
+        return self.policy.retry.attempts if self.policy is not None else 1
 
 
 class OffloadBroker:
@@ -288,6 +359,19 @@ class OffloadBroker:
                 the cap gets an immediately-resolved rejection future
                 (``None`` disables rejection — the default, matching the
                 historical unbounded queue).
+      resilience: optional
+                :class:`~repro.service.resilience.ResiliencePolicy` —
+                retry/backoff on failing dispatches, per-backend circuit
+                breaker, per-request deadlines, and graceful degradation
+                of quarantined (bin, bucket) flushes.  ``None`` keeps
+                the legacy contract: failures re-queue unresolved
+                requests and re-raise.
+      fault_injector: optional seeded
+                :class:`~repro.service.faults.FaultInjector` consulted
+                at the solve / pricing / cache-load / cache-store sites
+                (chaos testing and the faults benchmark).  With
+                ``rate=0`` or ``enabled=False`` every broker event is
+                bit-identical to a broker without an injector.
     """
 
     def __init__(
@@ -297,17 +381,22 @@ class OffloadBroker:
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         clock: Callable[[], float] = time.perf_counter,
         max_queued_bins: int | None = None,
+        resilience: ResiliencePolicy | None = None,
+        fault_injector: FaultInjector | None = None,
     ):
         if backend not in ("reference", "jax", "pallas"):
             raise ValueError(f"unknown MCOP batch backend: {backend!r}")
         self.backend = backend
         self.buckets = tuple(buckets)
         self.clock = clock
+        self.resilience = resilience
+        self.fault_injector = fault_injector
         self.telemetry = BrokerTelemetry()
         self._tenants: dict[str, _Tenant] = {}
         self._scheduler = WeightedFairScheduler(max_queued_bins=max_queued_bins)
         self._batch_groups: list = []  # BatchSessionGroup, registration order
         self._rejected_since_tick = 0
+        self._deadlines_armed = False
         self._tick = 0
 
     # -- tenants ---------------------------------------------------------
@@ -447,8 +536,24 @@ class OffloadBroker:
             )
         return r.future
 
+    def _deadline_tick(self, deadline: int | None) -> int | None:
+        """Absolute expiry tick for a submission (arms the deadline sweep)."""
+        if deadline is None and self.resilience is not None:
+            deadline = self.resilience.deadline_ticks
+        if deadline is None:
+            return None
+        if deadline <= 0:
+            raise ValueError("deadline must be positive (ticks)")
+        self._deadlines_armed = True
+        return self._tick + int(deadline)
+
     def submit(
-        self, name: str, env: Environment, *, lane: str = "user"
+        self,
+        name: str,
+        env: Environment,
+        *,
+        lane: str = "user",
+        deadline: int | None = None,
     ) -> PlacementFuture:
         """Enqueue a solve for ``env`` under the tenant's cost model.
 
@@ -458,6 +563,10 @@ class OffloadBroker:
                 the coalescing bin via the tenant cache's quantizer.
           lane: ``"user"`` (weighted-fair) or ``"elastic"`` (strict
                 priority, e.g. fleet resizes).
+          deadline: optional per-request deadline in ticks — a request
+                still queued after that many ticks resolves as
+                ``timed_out`` (default: the resilience policy's
+                ``deadline_ticks``, or no deadline).
         Returns:
           :class:`PlacementFuture`, resolved by a later :meth:`tick` —
           or immediately with a ``rejected`` reply when the scheduler's
@@ -474,21 +583,43 @@ class OffloadBroker:
                 f"tenant {name!r} has no profile; use submit_graph()"
             )
         return self._enqueue(
-            _Request(t, None, t.cache.key(env), PlacementFuture(), env=env, lane=lane)
+            _Request(
+                t,
+                None,
+                t.cache.key(env),
+                PlacementFuture(),
+                env=env,
+                lane=lane,
+                expires=self._deadline_tick(deadline),
+            )
         )
 
     def submit_graph(
-        self, name: str, g: WCG, env: Environment, *, lane: str = "user"
+        self,
+        name: str,
+        g: WCG,
+        env: Environment,
+        *,
+        lane: str = "user",
+        deadline: int | None = None,
     ) -> PlacementFuture:
         """Enqueue a caller-built WCG; ``env`` only determines the bin key.
 
-        Same future/rejection semantics as :meth:`submit`; used by
-        raw-graph tenants (elastic manager, broker sessions carrying an
-        already-built controller graph).
+        Same future/rejection/deadline semantics as :meth:`submit`; used
+        by raw-graph tenants (elastic manager, broker sessions carrying
+        an already-built controller graph).
         """
         t = self._tenants[name]
         return self._enqueue(
-            _Request(t, g, t.cache.key(env), PlacementFuture(), env=env, lane=lane)
+            _Request(
+                t,
+                g,
+                t.cache.key(env),
+                PlacementFuture(),
+                env=env,
+                lane=lane,
+                expires=self._deadline_tick(deadline),
+            )
         )
 
     @property
@@ -531,30 +662,135 @@ class OffloadBroker:
         """
         t0 = self.clock()
         self._tick += 1
+        # deadline sweep BEFORE draining: an overdue request must resolve
+        # as timed_out, not be served late (the sweep only ever runs once
+        # a deadline has actually been armed, so deadline-free brokers pay
+        # nothing and stay bit-identical to the historical tick)
+        timed_out = 0
+        if self._deadlines_armed:
+            for e in self._scheduler.expire(
+                lambda e: e.item.expires is not None
+                and e.item.expires < self._tick
+            ):
+                if not e.item.future.done:
+                    e.item.future.set(
+                        BrokerReply(
+                            None,
+                            cache_hit=False,
+                            coalesced=False,
+                            tick=self._tick,
+                            timed_out=True,
+                        )
+                    )
+                    timed_out += 1
         depth = self._scheduler.pending
         entries = self._scheduler.drain(budget)
         requests = [e.item for e in entries]
+        ctx = (
+            _TickCtx(
+                self.fault_injector,
+                self.resilience,
+                self._backoff_sleep,
+                entry_of={id(e.item): e for e in entries},
+            )
+            if self.resilience is not None or self.fault_injector is not None
+            else None
+        )
         try:
             # materialization is inside the containment: a failing deferred
             # build (bad environment) must re-queue innocents, not drop them
-            self._materialize(requests)
-            report = self._run_tick(requests, depth)
-        except BaseException:
+            self._materialize(requests, ctx)
+            report = self._run_tick(requests, depth, ctx)
+        except BaseException as err:
             self._scheduler.requeue(
                 e for e in entries if not e.item.future.done
             )
-            raise
+            if self.resilience is None or not isinstance(err, Exception):
+                raise
+            # resilient backstop: an error that escaped the per-bucket
+            # quarantine is still contained — unresolved requests are
+            # already back at the front of the queue for the next tick
+            if ctx is not None:
+                ctx.faults += 1
+            report = TickReport(
+                tick=self._tick,
+                queue_depth=depth,
+                requests=len(requests),
+                cache_hits=0,
+                coalesced=0,
+                solved=0,
+                dispatches=0,
+                buckets=(),
+                latency_s=0.0,
+                elastic=sum(r.lane == "elastic" for r in requests),
+                rejected=self._rejected_since_tick,
+                shares=(),
+            )
         # batched session groups tick after the request queue: each is one
         # vectorized tick_sessions call, atomic on its own (a failing group
         # keeps its staged observation for retry and does not disturb the
         # already-resolved request futures above)
-        report = self._tick_batches(report)
+        report = self._tick_batches(report, ctx)
+        if ctx is not None:
+            report = dataclasses.replace(
+                report,
+                faults=ctx.faults,
+                retries=ctx.retries,
+                breaker_trips=ctx.breaker_trips,
+                degraded=ctx.degraded,
+            )
+        if timed_out:
+            report = dataclasses.replace(report, timed_out=timed_out)
         report = dataclasses.replace(report, latency_s=self.clock() - t0)
         self._rejected_since_tick = 0
         self.telemetry.record(report)
         return report
 
-    def _tick_batches(self, report: TickReport) -> TickReport:
+    def drain(self) -> int:
+        """Resolve every still-queued future as ``rejected`` (shutdown).
+
+        A broker being torn down must not strand waiters: all queued
+        requests — whatever their lane or deadline — resolve immediately
+        with a ``rejected`` reply, and staged (un-ticked) batch-group
+        observations are discarded so the groups can be re-observed
+        against another broker.  Returns the number of futures resolved.
+        """
+        n = 0
+        for e in self._scheduler.drain(None):
+            if not e.item.future.done:
+                e.item.future.set(
+                    BrokerReply(
+                        None,
+                        cache_hit=False,
+                        coalesced=False,
+                        tick=self._tick,
+                        rejected=True,
+                    )
+                )
+                n += 1
+        self.telemetry.rejected_requests += n
+        for group in self._batch_groups:
+            group.discard_staged()
+        return n
+
+    def _backoff_sleep(self, seconds: float) -> None:
+        """Charge backoff/latency time to the broker clock.
+
+        Injected clocks (anything with ``advance``) are advanced —
+        deterministic tests and benchmarks never actually sleep; real
+        clocks sleep for real.
+        """
+        if seconds <= 0:
+            return
+        advance = getattr(self.clock, "advance", None)
+        if advance is not None:
+            advance(seconds)
+        else:
+            time.sleep(seconds)
+
+    def _tick_batches(
+        self, report: TickReport, ctx: _TickCtx | None = None
+    ) -> TickReport:
         """Run every staged batch group; fold counts into the report.
 
         Groups run ordered by current scheduler weight (descending,
@@ -570,7 +806,20 @@ class OffloadBroker:
         groups = sessions = hits = solved = 0
         for group in staged:
             g0 = self.clock()
-            group_report = group._tick()
+            try:
+                group_report = group._tick()
+            except Exception:
+                # resilient brokers contain a failing group to its own
+                # failure domain: the staged observation is kept (the
+                # group retries next tick) and healthy groups still run
+                if self.resilience is None:
+                    raise
+                if ctx is not None:
+                    ctx.faults += 1
+                self._scheduler.observe_latency(
+                    group.tenant, self.clock() - g0
+                )
+                continue
             self._scheduler.observe_latency(group.tenant, self.clock() - g0)
             if group_report is None:
                 continue
@@ -578,6 +827,14 @@ class OffloadBroker:
             sessions += int(np.count_nonzero(group_report.active))
             hits += group_report.hits + group_report.coalesced
             solved += group_report.solved
+            if ctx is not None:
+                ctx.faults += group_report.faults
+                ctx.retries += group_report.retries
+                ctx.breaker_trips += group_report.breaker_trips
+                if group_report.degraded is not None:
+                    ctx.degraded += int(
+                        np.count_nonzero(group_report.degraded)
+                    )
         return dataclasses.replace(
             report,
             batch_groups=groups,
@@ -586,18 +843,51 @@ class OffloadBroker:
             batch_solved=solved,
         )
 
-    def _materialize(self, requests: list[_Request]) -> None:
+    def _materialize(
+        self, requests: list[_Request], ctx: _TickCtx | None = None
+    ) -> None:
         """Build deferred WCGs: one ``build_batch`` per tenant per tick.
 
         Rows of the vectorized build are bit-identical to the scalar
         ``cost_model.build`` (same code path, batch of K), so deferral
         never changes a placement or a reported cost.
+
+        Resilient brokers additionally quarantine requests whose
+        *environment* carries a non-finite scalar before the vectorized
+        build: one poisoned observation must not abort the whole
+        tenant's build (the legacy path lets ``build_batch`` raise —
+        ``NonFiniteWeightError`` — and the tick containment re-queue).
+        A quarantined request resolves immediately as ``rejected``: its
+        input is invalid, so no placement — stale or fallback — can
+        honestly answer it.
         """
         deferred: dict[str, list[_Request]] = {}
         for r in requests:
             if r.g is None:
                 deferred.setdefault(r.tenant.name, []).append(r)
         for name, rs in deferred.items():
+            if ctx is not None and ctx.policy is not None:
+                kept = []
+                for r in rs:
+                    if all(
+                        math.isfinite(float(v))
+                        for v in dataclasses.astuple(r.env)
+                    ):
+                        kept.append(r)
+                        continue
+                    self._rejected_since_tick += 1
+                    r.future.set(
+                        BrokerReply(
+                            None,
+                            cache_hit=False,
+                            coalesced=False,
+                            tick=self._tick,
+                            rejected=True,
+                        )
+                    )
+                rs = kept
+                if not rs:
+                    continue
             t = self._tenants[name]
             batch = t.cost_model.build_batch(t.profile, [r.env for r in rs])
             for i, r in enumerate(rs):
@@ -632,9 +922,210 @@ class OffloadBroker:
             result, cache_hit=cache_hit, coalesced=coalesced, tick=self._tick
         )
 
+    # -- fault-site wrappers (ctx=None compiles away to the legacy path) --
+    def _cache_lookup(
+        self, r: _Request, index: int, ctx: _TickCtx | None
+    ) -> np.ndarray | None:
+        """Cache probe under the ``cache_load`` fault site.
+
+        A firing error/corrupt decision discards the loaded value — the
+        request is treated as a miss and re-solved (the cache is an
+        optimization, never ground truth, so a lost load is always safe).
+        Latency faults charge the clock and return the real value.
+        """
+        if ctx is not None and ctx.injector is not None:
+            d = ctx.injector.decide("cache_load", self._tick, index)
+            if d.fires:
+                ctx.faults += 1
+                if d.kind == "latency":
+                    ctx.sleep(d.delay_s)
+                else:
+                    return None
+        return r.tenant.cache.lookup(r.key, expected_n=r.g.n)
+
+    def _cache_store(
+        self, r: _Request, slot: int, mask: np.ndarray, ctx: _TickCtx | None
+    ) -> None:
+        """Representative store under the ``cache_store`` fault site.
+
+        A dropped store is silently absorbed: the bin simply misses again
+        on a later tick and re-solves — no stale or partial entry is ever
+        written.
+        """
+        if ctx is not None and ctx.injector is not None:
+            d = ctx.injector.decide("cache_store", self._tick, slot)
+            if d.fires:
+                ctx.faults += 1
+                if d.kind == "latency":
+                    ctx.sleep(d.delay_s)
+                else:
+                    return
+        r.tenant.cache.store(r.key, mask)
+
+    def _priced_rows(
+        self,
+        graphs: list[WCG],
+        masks: list[np.ndarray],
+        ctx: _TickCtx | None,
+    ) -> tuple[np.ndarray, np.ndarray] | None:
+        """:meth:`_price_rows` under the ``pricing`` fault site, retried.
+
+        Returns ``None`` when every attempt failed (resilient brokers
+        only) — the caller degrades those rows to fallback replies.
+        """
+        if ctx is None:
+            return self._price_rows(graphs, masks)
+        base = ctx.price_seq
+        ctx.price_seq += ctx.attempts
+        for attempt in range(ctx.attempts):
+            if attempt:
+                ctx.retries += 1
+                if ctx.policy is not None:
+                    ctx.sleep(ctx.policy.retry.backoff(attempt - 1))
+            try:
+                if ctx.injector is not None:
+                    d = ctx.injector.decide(
+                        "pricing", self._tick, base + attempt
+                    )
+                    if d.fires:
+                        ctx.faults += 1
+                        if d.kind == "latency":
+                            ctx.sleep(d.delay_s)
+                        else:
+                            raise InjectedFault(
+                                "pricing", self._tick, base + attempt, d.kind
+                            )
+                return self._price_rows(graphs, masks)
+            except Exception:
+                if ctx.policy is None:
+                    raise
+        return None
+
+    def _dispatch(
+        self, wb: WCGBatch, m: int, ctx: _TickCtx | None
+    ) -> list[MCOPResult] | None:
+        """One bucket's ``mcop_batch`` under retry/breaker/fault policy.
+
+        Resilient path, per attempt: pick the effective backend (the
+        circuit breaker walks pallas → jax → reference past open
+        circuits), consult the injector (corruption poisons a COPY of
+        the batch — caught by ``validate_finite`` before it can be
+        silently solved), dispatch, and reject non-finite cut values.
+        Returns ``None`` when all attempts failed — the caller
+        quarantines exactly this bucket's requests, nothing else.
+        """
+        if ctx is None:
+            return mcop_batch(wb, backend=self.backend, buckets=(m,))
+        policy = ctx.policy
+        breaker = policy.breaker if policy is not None else None
+        for attempt in range(ctx.attempts):
+            if attempt:
+                ctx.retries += 1
+                if policy is not None:
+                    ctx.sleep(policy.retry.backoff(attempt - 1))
+            backend = (
+                breaker.backend(self.backend, self._tick)
+                if breaker is not None
+                else self.backend
+            )
+            index = ctx.solve_seq
+            ctx.solve_seq += 1
+            use = wb
+            try:
+                if ctx.injector is not None:
+                    d = ctx.injector.decide("solve", self._tick, index)
+                    if d.fires:
+                        ctx.faults += 1
+                        if d.kind == "latency":
+                            ctx.sleep(d.delay_s)
+                        elif d.kind == "error":
+                            raise InjectedFault("solve", self._tick, index)
+                        else:
+                            use = poison_batch(wb)
+                use.validate_finite()
+                out = mcop_batch(use, backend=backend, buckets=(m,))
+                if not all(math.isfinite(res.min_cut) for res in out):
+                    raise RuntimeError(
+                        "non-finite min_cut from solver dispatch"
+                    )
+                if breaker is not None:
+                    breaker.record_success(backend)
+                return out
+            except Exception:
+                if breaker is not None and breaker.record_failure(
+                    backend, self._tick
+                ):
+                    ctx.breaker_trips += 1
+                if policy is None:
+                    raise
+        return None
+
+    def _fallback_reply(
+        self,
+        r: _Request,
+        ctx: _TickCtx,
+        *,
+        count: bool = True,
+        cache_hit: bool = False,
+        coalesced: bool = False,
+    ) -> None:
+        """Serve the safe placement: stale cached bin, else §4.3 no-offload.
+
+        The stale probe is uncounted — the request's single cache-stat
+        event is the miss recorded here when ``count`` (hits that
+        degraded at pricing were already counted at classification).
+        Fallbacks never store: the bin stays cold and re-solves once the
+        fault clears.
+        """
+        mask = r.tenant.cache.lookup(r.key, expected_n=r.g.n)
+        no_off = float(np.asarray(r.g.w_local).sum())
+        if mask is None:
+            res = MCOPResult(
+                min_cut=no_off,
+                local_mask=np.ones(r.g.n, dtype=bool),
+                phases=[],
+            )
+        else:
+            res = baselines.reprice_clamped_priced(
+                float(r.g.total_cost(mask)), no_off, mask
+            )
+        if count:
+            r.tenant.cache.record(False)
+        ctx.degraded += 1
+        r.future.set(
+            BrokerReply(
+                res,
+                cache_hit=cache_hit,
+                coalesced=coalesced,
+                tick=self._tick,
+                degraded=True,
+            )
+        )
+
+    def _quarantine(
+        self, rep: _Request, fols: list[_Request], ctx: _TickCtx
+    ) -> None:
+        """Contain one (bin, bucket) flush failure to its own requests."""
+        if ctx.policy is not None and ctx.policy.degrade == "requeue":
+            self._scheduler.requeue(
+                ctx.entry_of[id(r)]
+                for r in (rep, *fols)
+                if id(r) in ctx.entry_of
+            )
+            return
+        self._fallback_reply(rep, ctx)
+        for f in fols:
+            self._fallback_reply(f, ctx, coalesced=True)
+
     def _run_tick(
-        self, requests: list[_Request], depth: int
+        self,
+        requests: list[_Request],
+        depth: int,
+        ctx: _TickCtx | None = None,
     ) -> TickReport:
+        # requests quarantined at materialization (invalid environment)
+        # are already resolved and never got a graph
+        requests = [r for r in requests if r.g is not None]
         hits = coalesced = 0
         solves: list[_Request] = []
         hit_rows: list[tuple[_Request, np.ndarray]] = []
@@ -643,8 +1134,8 @@ class OffloadBroker:
         # be handed a wrong-length mask (mirrors the cache's expected_n)
         rep_slot: dict[tuple[str, int, tuple[int, ...]], int] = {}
         followers: dict[int, list[_Request]] = {}
-        for r in requests:
-            mask = r.tenant.cache.lookup(r.key, expected_n=r.g.n)
+        for i, r in enumerate(requests):
+            mask = self._cache_lookup(r, i, ctx)
             if mask is not None:
                 r.tenant.cache.record(True)
                 hits += 1
@@ -662,35 +1153,49 @@ class OffloadBroker:
         # size and resolved BEFORE any solver dispatch — a failing
         # dispatch must not strand futures the cache already answered
         if hit_rows:
-            h_partial, h_no_off = self._price_rows(
-                [r.g for r, _ in hit_rows], [m for _, m in hit_rows]
+            priced = self._priced_rows(
+                [r.g for r, _ in hit_rows], [m for _, m in hit_rows], ctx
             )
-            for i, (r, mask) in enumerate(hit_rows):
-                r.future.set(
-                    self._reply(
-                        baselines.reprice_clamped_priced(
-                            float(h_partial[i]), float(h_no_off[i]), mask
-                        ),
-                        cache_hit=True,
-                        coalesced=False,
+            if priced is None:
+                # pricing exhausted its retries: the hits were already
+                # counted at classification, serve each the fallback
+                for r, _ in hit_rows:
+                    self._fallback_reply(r, ctx, count=False, cache_hit=True)
+            else:
+                h_partial, h_no_off = priced
+                for i, (r, mask) in enumerate(hit_rows):
+                    r.future.set(
+                        self._reply(
+                            baselines.reprice_clamped_priced(
+                                float(h_partial[i]), float(h_no_off[i]), mask
+                            ),
+                            cache_hit=True,
+                            coalesced=False,
+                        )
                     )
-                )
 
         # one mcop_batch call per static shape bucket, shared across
         # tenants; each bucket is packed into a WCGBatch once, so the
-        # dispatch skips the per-graph packing pass
+        # dispatch skips the per-graph packing pass.  A bucket whose
+        # dispatch exhausts its retries is quarantined — its slots stay
+        # None and are degraded/re-queued after the healthy buckets
+        # commit below.
         by_bucket: dict[int, list[int]] = {}
         for i, r in enumerate(solves):
             by_bucket.setdefault(_bucket_size(r.g.n, self.buckets), []).append(i)
         solved: list[MCOPResult | None] = [None] * len(solves)
         dispatches = 0
+        dispatched_buckets: list[int] = []
+        quarantined: list[int] = []
         for m, idxs in sorted(by_bucket.items()):
-            batch = mcop_batch(
-                WCGBatch.from_wcgs([solves[i].g for i in idxs], m=m),
-                backend=self.backend,
-                buckets=(m,),
+            batch = self._dispatch(
+                WCGBatch.from_wcgs([solves[i].g for i in idxs], m=m), m, ctx
             )
+            if batch is None:
+                quarantined.extend(idxs)
+                continue
             dispatches += 1
+            dispatched_buckets.append(m)
             for i, res in zip(idxs, batch):
                 solved[i] = res
 
@@ -712,12 +1217,17 @@ class OffloadBroker:
         fol_rows = {
             s: [add_row(f.g, solved[s].local_mask) for f in fs]
             for s, fs in followers.items()
+            if solved[s] is not None
         }
-        partial, no_off = (
-            self._price_rows(row_graphs, row_masks)
+        priced = (
+            self._priced_rows(row_graphs, row_masks, ctx)
             if row_graphs
             else (np.zeros(0), np.zeros(0))
         )
+        # follower repricing degraded: reps still commit below, and each
+        # follower falls back (its stale probe then finds the mask its
+        # representative just stored — still the freshest safe answer)
+        partial, no_off = priced if priced is not None else (None, None)
 
         # counter recording for misses/followers happens here, after the
         # dispatches succeeded: a failed tick re-queues these requests, and
@@ -725,6 +1235,8 @@ class OffloadBroker:
         # would count each request exactly once).  Followers count as hits:
         # serially they would have hit the representative's put().
         for slot, r in enumerate(solves):
+            if solved[slot] is None:
+                continue  # quarantined bucket, handled below
             # §4.3 clamp against the baseline; the reply keeps the solver's
             # own cut value (shared helper with the serial path)
             rep_clamped = rep_no_off[slot] < solved[slot].min_cut
@@ -732,9 +1244,12 @@ class OffloadBroker:
                 solved[slot], rep_no_off[slot]
             )
             r.tenant.cache.record(False)
-            r.tenant.cache.store(r.key, candidate.local_mask)
+            self._cache_store(r, slot, candidate.local_mask, ctx)
             r.future.set(self._reply(candidate, cache_hit=False, coalesced=False))
             for f, fi in zip(followers.get(slot, ()), fol_rows.get(slot, ())):
+                if partial is None:
+                    self._fallback_reply(f, ctx, coalesced=True)
+                    continue
                 # a clamped representative hands followers the all-local
                 # mask, whose price is exactly the no-offload baseline
                 if rep_clamped:
@@ -750,6 +1265,11 @@ class OffloadBroker:
                 f.tenant.cache.record(True)
                 f.future.set(self._reply(res, cache_hit=True, coalesced=True))
 
+        for slot in quarantined:
+            self._quarantine(
+                solves[slot], list(followers.get(slot, ())), ctx
+            )
+
         shares: dict[str, int] = {}
         for r in requests:
             shares[r.tenant.name] = shares.get(r.tenant.name, 0) + 1
@@ -759,9 +1279,9 @@ class OffloadBroker:
             requests=len(requests),
             cache_hits=hits,
             coalesced=coalesced,
-            solved=len(solves),
+            solved=sum(res is not None for res in solved),
             dispatches=dispatches,
-            buckets=tuple(sorted(by_bucket)),
+            buckets=tuple(dispatched_buckets),
             # latency is stamped by tick() once batch groups have run, so
             # the injected clock is read exactly twice per tick
             latency_s=0.0,

@@ -237,6 +237,38 @@ class WeightedFairScheduler:
                 self._bin_counts[bin_id] = self._bin_counts.get(bin_id, 0) + 1
                 self._queues[entry.tenant].appendleft(entry)
 
+    def expire(self, predicate) -> list[QueueEntry]:
+        """Remove and return every queued entry matching ``predicate``.
+
+        The broker's deadline sweep: entries whose request outlived its
+        deadline are pulled out of the queues (priority lane first, then
+        per-tenant FIFO in rotation order) so their futures can resolve
+        as timed-out instead of waiting for a drain that may never reach
+        them.  User-lane bin counts are released like :meth:`_pop`, so
+        backpressure sees the freed bins immediately.
+        """
+        removed: list[QueueEntry] = []
+
+        def split(q: deque[QueueEntry]) -> deque[QueueEntry]:
+            kept: deque[QueueEntry] = deque()
+            for entry in q:
+                (removed if predicate(entry) else kept).append(entry)
+            return kept
+
+        self._priority = split(self._priority)
+        for tenant in self._tenants:
+            self._queues[tenant] = split(self._queues[tenant])
+        for entry in removed:
+            if entry.lane == PRIORITY_LANE:
+                continue
+            bin_id = (entry.tenant, entry.bin_key)
+            left = self._bin_counts.get(bin_id, 1) - 1
+            if left <= 0:
+                self._bin_counts.pop(bin_id, None)
+            else:
+                self._bin_counts[bin_id] = left
+        return removed
+
     # -- draining --------------------------------------------------------
     def _pop(self, tenant: str) -> QueueEntry:
         entry = self._queues[tenant].popleft()

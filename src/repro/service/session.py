@@ -240,10 +240,19 @@ class BatchSessionGroup:
             backend=self.broker.backend,
             buckets=self.broker.buckets,
             device_telemetry=self.device_telemetry,
+            faults=self.broker.fault_injector,
+            resilience=self.broker.resilience,
+            tick=self.broker._tick,
+            sleep=self.broker._backoff_sleep,
         )
         self._staged = None
         self._reports.append(report)
         return report
+
+    def discard_staged(self) -> None:
+        """Drop a staged-but-unticked observation (broker shutdown path:
+        :meth:`~repro.service.broker.OffloadBroker.drain`)."""
+        self._staged = None
 
     def drain(self) -> list[SessionTickReport]:
         """Return (and clear) the reports of every completed tick."""
