@@ -14,6 +14,11 @@ A third pass measures the weighted-fair scheduler: two tenants with a
 derived column reports the first-tick share split plus backpressure
 rejections — the multi-tenant fairness numbers a deployment would watch.
 
+A fourth pass gates observability overhead: the identical workload runs
+with a Tracer + MetricsRegistry attached (best of 3 passes each way),
+and the traced broker must stay within 1.15x of the untraced one —
+instrumentation light enough to leave on in production.
+
 Rows are appended to ``BENCH_broker.json`` by ``benchmarks/run.py`` (a
 bounded trajectory, like ``BENCH_mcop.json`` for the solver backends)
 and smoke-checked after each run.
@@ -24,7 +29,13 @@ from __future__ import annotations
 import time
 
 from repro.core import AppProfile, Environment, ResponseTimeModel, face_recognition_graph
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.service import OffloadBroker, run_workload, user_traces
+
+# traced ticks must stay within this factor of untraced (the "leave it
+# on in production" budget; asserted here and in tests/test_observability)
+TRACED_OVERHEAD_BUDGET = 1.15
 
 
 def _drive(broker, traces, n_users: int, steps: int) -> float:
@@ -77,7 +88,52 @@ def run() -> list[dict]:
             }
         )
     rows.append(_wfq_row(profile))
+    rows.append(_traced_overhead_row(profile))
     return rows
+
+
+def _traced_overhead_row(profile: AppProfile) -> dict:
+    """Enabled-observability tick throughput vs the detached broker.
+
+    Identical workload, best-of-3 wall time each way (damping scheduler
+    noise); the ratio is gated at ``TRACED_OVERHEAD_BUDGET``.  The
+    tracer ring is sized to retain the whole run, so the measurement
+    includes span construction, ring appends, and registry updates.
+    """
+    n_users, steps = 32, 10
+    traces = user_traces(n_users, steps, seed=7)
+
+    def best_of(k: int, make) -> float:
+        best = float("inf")
+        for _ in range(k):
+            broker = make()
+            broker.register("app", profile, ResponseTimeModel())
+            best = min(best, _drive(broker, traces, n_users, steps))
+        return best
+
+    best_of(1, lambda: OffloadBroker(backend="jax"))  # compile untimed
+    t_plain = best_of(3, lambda: OffloadBroker(backend="jax"))
+    t_traced = best_of(
+        3,
+        lambda: OffloadBroker(
+            backend="jax",
+            tracer=Tracer(capacity=16384),
+            metrics=MetricsRegistry(),
+        ),
+    )
+    ratio = t_traced / max(t_plain, 1e-12)
+    if ratio > TRACED_OVERHEAD_BUDGET:
+        raise RuntimeError(
+            f"traced broker tick overhead {ratio:.3f}x exceeds the "
+            f"{TRACED_OVERHEAD_BUDGET}x budget"
+        )
+    requests = n_users * steps
+    return {
+        "name": f"broker/traced_u{n_users}x{steps}",
+        "us_per_call": t_traced / requests * 1e6,
+        "derived": f"overhead={ratio:.3f}x vs untraced"
+        f" (budget {TRACED_OVERHEAD_BUDGET}x; best of 3)",
+    }
 
 
 def _wfq_row(profile: AppProfile) -> dict:

@@ -30,9 +30,12 @@ smoke-checked after every append.
 from __future__ import annotations
 
 import argparse
+import functools
 import json
+import os
 import pathlib
 import re
+import subprocess
 import sys
 import time
 
@@ -74,10 +77,42 @@ _FAULTS_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_faults.json"
 _TRAJECTORY_KEEP = 50  # bounded history of runs
 
 
+@functools.lru_cache(maxsize=1)
+def _env_metadata() -> dict:
+    """Execution environment stamped onto every trajectory record.
+
+    Makes cross-commit comparisons honest: a row timed on a different
+    accelerator backend, under Pallas interpret mode, or on a different
+    core count is not comparable, and the artifact now says so.
+    """
+    import jax  # deferred: keep artifact-only code paths import-light
+
+    from repro.kernels.ops import default_interpret
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=_REPO_ROOT,
+            capture_output=True,
+            text=True,
+            timeout=10,
+            check=False,
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    return {
+        "jax_backend": jax.default_backend(),
+        "pallas_interpret": bool(default_interpret()),
+        "cpu_count": os.cpu_count(),
+        "git_sha": sha,
+    }
+
+
 def _append_trajectory(
     rows: list[dict],
     path: pathlib.Path = _TRAJECTORY_PATH,
     benchmark: str = "mcop_backends",
+    wall_s: float | None = None,
 ) -> None:
     """Append one run's rows to a bounded trajectory artifact."""
     doc = {"benchmark": benchmark, "runs": []}
@@ -98,6 +133,8 @@ def _append_trajectory(
     doc["runs"].append(
         {
             "unix_time": int(time.time()),
+            "env": _env_metadata(),
+            "wall_s": round(wall_s, 3) if wall_s is not None else None,
             "rows": [
                 {
                     "name": r["name"],
@@ -188,26 +225,36 @@ def main(argv=None) -> int:
     failures = 0
     for name in names:
         try:
+            series_t0 = time.perf_counter()
             rows = list(MODULES[name].run())
+            wall_s = time.perf_counter() - series_t0
             for row in rows:
                 derived = str(row["derived"]).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.2f},{derived}", flush=True)
             if name == "mcop_backends":
-                _append_trajectory(rows)
+                _append_trajectory(rows, wall_s=wall_s)
             elif name == "broker":
-                _append_trajectory(rows, _BROKER_TRAJECTORY_PATH, "broker")
+                _append_trajectory(
+                    rows, _BROKER_TRAJECTORY_PATH, "broker", wall_s=wall_s
+                )
                 _smoke_check_trajectory(_BROKER_TRAJECTORY_PATH, "broker")
                 print("broker/smoke,0.00,BENCH_broker.json ok", flush=True)
             elif name == "pipeline":
-                _append_trajectory(rows, _PIPELINE_TRAJECTORY_PATH, "pipeline")
+                _append_trajectory(
+                    rows, _PIPELINE_TRAJECTORY_PATH, "pipeline", wall_s=wall_s
+                )
                 _smoke_check_trajectory(_PIPELINE_TRAJECTORY_PATH, "pipeline")
                 print("pipeline/smoke,0.00,BENCH_pipeline.json ok", flush=True)
             elif name == "scale":
-                _append_trajectory(rows, _SCALE_TRAJECTORY_PATH, "scale")
+                _append_trajectory(
+                    rows, _SCALE_TRAJECTORY_PATH, "scale", wall_s=wall_s
+                )
                 _smoke_check_trajectory(_SCALE_TRAJECTORY_PATH, "scale")
                 print("scale/smoke,0.00,BENCH_scale.json ok", flush=True)
             elif name == "faults":
-                _append_trajectory(rows, _FAULTS_TRAJECTORY_PATH, "faults")
+                _append_trajectory(
+                    rows, _FAULTS_TRAJECTORY_PATH, "faults", wall_s=wall_s
+                )
                 _smoke_check_trajectory(_FAULTS_TRAJECTORY_PATH, "faults")
                 print("faults/smoke,0.00,BENCH_faults.json ok", flush=True)
         except Exception as e:  # noqa: BLE001

@@ -640,6 +640,7 @@ def solve_envs(
     backend: str = "jax",
     buckets: Sequence[int] = DEFAULT_BUCKETS,
     interpret: bool | None = None,
+    metrics=None,
 ) -> list[MCOPResult]:
     """Fused Fig.-1 pipeline: K environments → K placements, one dispatch.
 
@@ -660,6 +661,11 @@ def solve_envs(
         numpy oracle (exact-parity testing).
       buckets: static shape buckets for the padded vertex count.
       interpret: Pallas-only interpret/compiled override.
+      metrics: optional :class:`~repro.obs.metrics.MetricsRegistry` —
+        when given, each call counts one ``solve_envs_dispatches`` and
+        times the dispatch into ``solve_envs_duration_s``, both labeled
+        ``(backend, bucket)``.  ``None`` (default) adds no work and no
+        clock reads.
     Returns:
       ``list[MCOPResult]``, one per environment in input order, masks
       ``(n,)`` bool over the profile's vertices.
@@ -687,8 +693,22 @@ def solve_envs(
     # corrupted environments must be named here, not silently solved
     # (NaN weights partition into garbage) — see NonFiniteWeightError
     validate_env_finite(envs)
+    if metrics is not None:
+        bucket = _bucket_size(profile.n, buckets)
+        metrics.counter(
+            "solve_envs_dispatches", backend=backend, bucket=bucket
+        ).inc()
+        timer = metrics.timer(
+            "solve_envs_duration_s", backend=backend, bucket=bucket
+        )
+    else:
+        from repro.obs.trace import NULL_SPAN as timer
     if backend == "reference":
-        return [mcop_reference(g) for g in model.build_batch(profile, envs).to_wcgs()]
+        with timer:
+            return [
+                mcop_reference(g)
+                for g in model.build_batch(profile, envs).to_wcgs()
+            ]
     if backend not in ("jax", "pallas"):
         raise ValueError(f"unknown MCOP batch backend: {backend!r}")
     dtype = _solver_dtype(backend)
@@ -710,16 +730,17 @@ def solve_envs(
         pinned[0] = True
 
     fn = _fused_solver(model, backend, interpret)
-    cuts, masks = fn(
-        jnp.asarray(t_local),
-        jnp.asarray(data_in),
-        jnp.asarray(data_out),
-        jnp.asarray(pinned),
-        envs.astype(dtype)
-        if isinstance(envs, EnvArrays)
-        else EnvArrays.from_envs(envs, dtype),
-    )
-    cuts, masks = jax.device_get((cuts, masks))  # one host sync
+    with timer:
+        cuts, masks = fn(
+            jnp.asarray(t_local),
+            jnp.asarray(data_in),
+            jnp.asarray(data_out),
+            jnp.asarray(pinned),
+            envs.astype(dtype)
+            if isinstance(envs, EnvArrays)
+            else EnvArrays.from_envs(envs, dtype),
+        )
+        cuts, masks = jax.device_get((cuts, masks))  # one host sync
     return [
         MCOPResult(min_cut=float(cuts[i]), local_mask=masks[i, :n].copy(), phases=[])
         for i in range(k)

@@ -152,6 +152,7 @@ class CacheStats:
     misses: int
     size: int
     capacity: int
+    evictions: int = 0
 
     @property
     def lookups(self) -> int:
@@ -184,6 +185,30 @@ class PlacementCache:
         self._entries: OrderedDict[Tuple[int, ...], np.ndarray] = OrderedDict()
         self._hits = 0
         self._misses = 0
+        self._evictions = 0
+        # bound metrics instruments (None until bind_metrics); kept as a
+        # flat tuple so the hot funnel pays one attribute read when unbound
+        self._metric_instruments = None
+
+    def bind_metrics(self, registry, **labels) -> None:
+        """Mirror this cache's counters into a
+        :class:`~repro.obs.metrics.MetricsRegistry`.
+
+        ``labels`` identify the cache (the broker binds ``tenant=name``).
+        Counters ``cache_hits`` / ``cache_misses`` / ``cache_evictions``
+        and gauge ``cache_size`` pick up every event from bind time on;
+        historical counts are seeded so the registry view equals
+        :attr:`stats` at all times.
+        """
+        hits = registry.counter("cache_hits", **labels)
+        misses = registry.counter("cache_misses", **labels)
+        evictions = registry.counter("cache_evictions", **labels)
+        size = registry.gauge("cache_size", **labels)
+        hits.inc(self._hits)
+        misses.inc(self._misses)
+        evictions.inc(self._evictions)
+        size.set(len(self._entries))
+        self._metric_instruments = (hits, misses, evictions, size)
 
     # -- key/lookup/record primitives ----------------------------------
     def key(self, env: Environment) -> Tuple[int, ...]:
@@ -207,21 +232,35 @@ class PlacementCache:
         return mask.copy()
 
     def record(self, hit: bool) -> None:
-        if hit:
-            self._hits += 1
-        else:
-            self._misses += 1
+        self.record_many(hits=int(hit), misses=1 - int(hit))
 
     def record_many(self, *, hits: int = 0, misses: int = 0) -> None:
-        """Batched :meth:`record` — one call for a whole tick's counters."""
+        """THE stat funnel: every hit/miss count — scalar :meth:`record`,
+        :meth:`get`, :meth:`get_many`, the batched session tick — lands
+        here as one shared increment, so the scalar and batched paths
+        cannot drift apart, and bound metrics see every event."""
         self._hits += int(hits)
         self._misses += int(misses)
+        m = self._metric_instruments
+        if m is not None:
+            if hits:
+                m[0].inc(hits)
+            if misses:
+                m[1].inc(misses)
 
     def store(self, key: Tuple[int, ...], local_mask: np.ndarray) -> None:
         self._entries[key] = np.asarray(local_mask, dtype=bool).copy()
         self._entries.move_to_end(key)
+        evicted = 0
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
+            evicted += 1
+        self._evictions += evicted
+        m = self._metric_instruments
+        if m is not None:
+            if evicted:
+                m[2].inc(evicted)
+            m[3].set(len(self._entries))
 
     # -- convenience front door ----------------------------------------
     def get(
@@ -272,10 +311,15 @@ class PlacementCache:
         hoisted into one vectorized pass.
         """
         out: list[np.ndarray | None] = []
+        hits = 0
         for key in self.keys_batch(envs):
             mask = self.lookup(key, expected_n)
-            self.record(mask is not None)
+            hits += mask is not None
             out.append(mask)
+        # one shared funnel call for the whole batch (not a record() per
+        # key): same totals, and scalar/batched accounting share one
+        # code path by construction
+        self.record_many(hits=hits, misses=len(out) - hits)
         return out
 
     def put_many(self, envs, local_masks) -> None:
@@ -307,12 +351,17 @@ class PlacementCache:
             misses=self._misses,
             size=len(self._entries),
             capacity=self.capacity,
+            evictions=self._evictions,
         )
 
     def clear(self) -> None:
         self._entries.clear()
         self._hits = 0
         self._misses = 0
+        self._evictions = 0
+        m = self._metric_instruments
+        if m is not None:
+            m[3].set(0)
 
     # -- persistence -----------------------------------------------------
     def snapshot(self, *, fingerprint: str | None = None) -> dict:

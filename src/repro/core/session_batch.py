@@ -63,6 +63,7 @@ from repro.core.adaptive import AdaptationEvent, drift_exceeded_arrays
 from repro.core.cost_models import AppProfile, CostModel, EnvArrays
 from repro.core.mcop import DEFAULT_BUCKETS, MCOPResult, solve_envs
 from repro.core.placement_cache import PlacementCache
+from repro.obs.trace import NULL_SPAN
 
 __all__ = ["SessionBatch", "SessionTickReport", "tick_sessions"]
 
@@ -366,6 +367,8 @@ def tick_sessions(
     resilience=None,
     tick: int = 0,
     sleep=None,
+    tracer=None,
+    metrics=None,
 ) -> SessionTickReport:
     """One broker tick over all K sessions of ``batch``.
 
@@ -412,6 +415,13 @@ def tick_sessions(
     deterministic injector; ``sleep`` charges backoff/latency time to
     the caller's clock.  Pricing failures still restore-and-raise (the
     broker contains them to the group).
+
+    Observability (``tracer``/``metrics``, see ``repro.obs``): when
+    attached, the tick emits stage spans (drift, cache probe, solve
+    flush, pricing, commit) and fault/retry/breaker/degraded events on
+    the tracer, and dispatch timings on the registry.  Both default to
+    ``None`` and the instrumented paths then run bit-identically to the
+    uninstrumented tick — notably they never read the caller's clock.
     """
     if faults is not None or resilience is not None:
         # deferred: the fault vocabulary lives in the service layer
@@ -424,14 +434,23 @@ def tick_sessions(
         if sleep is not None and seconds > 0:
             sleep(seconds)
 
+    def _span(name: str, **attrs):
+        return tracer.span(name, **attrs) if tracer is not None else NULL_SPAN
+
+    def _event(name: str, **attrs) -> None:
+        if tracer is not None:
+            tracer.event(name, **attrs)
+
     state = batch.checkpoint()
     try:
-        due = batch.begin_step(envs)
-        n = batch.n
-        # one vectorized host f64 build: pricing, baselines and clamps for
-        # the whole batch (rows bit-identical to cost_model.build)
-        wcg_batch = model.build_batch(profile, envs)
-        no_off = np.asarray(wcg_batch.w_local).sum(axis=-1)  # (k,)
+        with _span("stage.drift", tick=tick, sessions=batch.capacity) as sp:
+            due = batch.begin_step(envs)
+            n = batch.n
+            # one vectorized host f64 build: pricing, baselines and clamps
+            # for the whole batch (rows bit-identical to cost_model.build)
+            wcg_batch = model.build_batch(profile, envs)
+            no_off = np.asarray(wcg_batch.w_local).sum(axis=-1)  # (k,)
+            sp.set(due=int(np.count_nonzero(due)))
 
         # ---- stage 1: classify due sessions against the cache ----------
         due_idx = np.nonzero(due)[0]
@@ -443,30 +462,43 @@ def tick_sessions(
         fol_idx: list[int] = []
         fol_slot: list[int] = []
         rep_slot: dict[tuple, int] = {}
-        for row, i in enumerate(due_idx):
-            key = tuple(int(v) for v in keys[row])
-            lost_load = False
-            if faults is not None:
-                d = faults.decide("cache_load", tick, int(i))
-                if d.fires:
-                    n_faults += 1
-                    if d.kind == "latency":
-                        _charge(d.delay_s)
-                    else:
-                        lost_load = True  # probe discarded: treat as miss
-            mask = None if lost_load else cache.lookup(key, expected_n=n)
-            if mask is not None:
-                hit_idx.append(int(i))
-                hit_masks.append(mask)
-                continue
-            slot = rep_slot.get(key)
-            if slot is None:
-                rep_slot[key] = len(solve_idx)
-                solve_idx.append(int(i))
-                solve_keys.append(key)
-            else:
-                fol_idx.append(int(i))
-                fol_slot.append(slot)
+        with _span("stage.cache_probe", due=int(due_idx.size)) as sp:
+            for row, i in enumerate(due_idx):
+                key = tuple(int(v) for v in keys[row])
+                lost_load = False
+                if faults is not None:
+                    d = faults.decide("cache_load", tick, int(i))
+                    if d.fires:
+                        n_faults += 1
+                        _event(
+                            "fault",
+                            site="cache_load",
+                            kind=d.kind,
+                            tick=tick,
+                            index=int(i),
+                        )
+                        if d.kind == "latency":
+                            _charge(d.delay_s)
+                        else:
+                            lost_load = True  # probe discarded: miss
+                mask = None if lost_load else cache.lookup(key, expected_n=n)
+                if mask is not None:
+                    hit_idx.append(int(i))
+                    hit_masks.append(mask)
+                    continue
+                slot = rep_slot.get(key)
+                if slot is None:
+                    rep_slot[key] = len(solve_idx)
+                    solve_idx.append(int(i))
+                    solve_keys.append(key)
+                else:
+                    fol_idx.append(int(i))
+                    fol_slot.append(slot)
+            sp.set(
+                hits=len(hit_idx),
+                misses=len(solve_idx),
+                coalesced=len(fol_idx),
+            )
 
         # ---- stage 2: ONE solve flush for the distinct-bin misses ------
         # Resilient mode retries the flush (injector consulted per
@@ -476,45 +508,71 @@ def tick_sessions(
         solved: list | None = [] if not solve_idx else None
         if solve_idx:
             sub = envs.take(solve_idx)
-            for attempt in range(attempts):
-                if attempt:
-                    n_retries += 1
-                    _charge(resilience.retry.backoff(attempt - 1))
-                eff = (
-                    breaker.backend(backend, tick)
-                    if breaker is not None
-                    else backend
-                )
-                use = sub
-                try:
-                    if faults is not None:
-                        d = faults.decide("solve", tick, attempt)
-                        if d.fires:
-                            n_faults += 1
-                            if d.kind == "latency":
-                                _charge(d.delay_s)
-                            elif d.kind == "error":
-                                raise InjectedFault("solve", tick, attempt)
-                            else:
-                                use = poison_envs(sub)
-                    out = solve_envs(
-                        profile, model, use, backend=eff, buckets=buckets
-                    )
-                    if not all(np.isfinite(r.min_cut) for r in out):
-                        raise RuntimeError(
-                            "non-finite min_cut from solve flush"
+            with _span(
+                "stage.solve_flush",
+                batch=len(solve_idx),
+                backend=backend,
+                tick=tick,
+            ):
+                for attempt in range(attempts):
+                    if attempt:
+                        n_retries += 1
+                        _event(
+                            "retry", site="solve", attempt=attempt, tick=tick
                         )
-                    if breaker is not None:
-                        breaker.record_success(eff)
-                    solved = out
-                    break
-                except Exception:
-                    if breaker is not None and breaker.record_failure(
-                        eff, tick
-                    ):
-                        n_trips += 1
-                    if resilience is None:
-                        raise
+                        _charge(resilience.retry.backoff(attempt - 1))
+                    eff = (
+                        breaker.backend(backend, tick)
+                        if breaker is not None
+                        else backend
+                    )
+                    use = sub
+                    try:
+                        if faults is not None:
+                            d = faults.decide("solve", tick, attempt)
+                            if d.fires:
+                                n_faults += 1
+                                _event(
+                                    "fault",
+                                    site="solve",
+                                    kind=d.kind,
+                                    tick=tick,
+                                    index=attempt,
+                                )
+                                if d.kind == "latency":
+                                    _charge(d.delay_s)
+                                elif d.kind == "error":
+                                    raise InjectedFault(
+                                        "solve", tick, attempt
+                                    )
+                                else:
+                                    use = poison_envs(sub)
+                        out = solve_envs(
+                            profile,
+                            model,
+                            use,
+                            backend=eff,
+                            buckets=buckets,
+                            metrics=metrics,
+                        )
+                        if not all(np.isfinite(r.min_cut) for r in out):
+                            raise RuntimeError(
+                                "non-finite min_cut from solve flush"
+                            )
+                        if breaker is not None:
+                            breaker.record_success(eff)
+                        solved = out
+                        break
+                    except Exception:
+                        if breaker is not None and breaker.record_failure(
+                            eff, tick
+                        ):
+                            n_trips += 1
+                            _event(
+                                "breaker_trip", backend=eff, tick=tick
+                            )
+                        if resilience is None:
+                            raise
         deg_idx: list[int] = []
         if solved is None:
             # flush quarantined: reps AND their followers fall back to
@@ -531,6 +589,7 @@ def tick_sessions(
                 )
             solve_idx, solve_keys, fol_idx, fol_slot = [], [], [], []
             solved = []
+            _event("degraded", sessions=len(deg_idx), tick=tick)
         solver_cuts = np.array([r.min_cut for r in solved], dtype=np.float64)
         solved_masks = (
             np.stack([r.local_mask for r in solved]).astype(bool)
@@ -574,24 +633,39 @@ def tick_sessions(
             rows[deg_idx] = np.stack(deg_masks)
             sel[deg_idx] = True
         report = None
-        for attempt in range(attempts):
-            if attempt:
-                n_retries += 1
-                _charge(resilience.retry.backoff(attempt - 1))
-            try:
-                if faults is not None:
-                    d = faults.decide("pricing", tick, attempt)
-                    if d.fires:
-                        n_faults += 1
-                        if d.kind == "latency":
-                            _charge(d.delay_s)
-                        else:
-                            raise InjectedFault("pricing", tick, attempt)
-                report = pricing.price_batch(wcg_batch, rows)
-                break
-            except Exception:
-                if resilience is None:
-                    raise
+        with _span("stage.pricing", rows=batch.capacity, tick=tick):
+            for attempt in range(attempts):
+                if attempt:
+                    n_retries += 1
+                    _event(
+                        "retry", site="pricing", attempt=attempt, tick=tick
+                    )
+                    _charge(resilience.retry.backoff(attempt - 1))
+                try:
+                    if faults is not None:
+                        d = faults.decide("pricing", tick, attempt)
+                        if d.fires:
+                            n_faults += 1
+                            _event(
+                                "fault",
+                                site="pricing",
+                                kind=d.kind,
+                                tick=tick,
+                                index=attempt,
+                            )
+                            if d.kind == "latency":
+                                _charge(d.delay_s)
+                            else:
+                                raise InjectedFault("pricing", tick, attempt)
+                    if metrics is not None:
+                        with metrics.timer("price_batch_duration_s"):
+                            report = pricing.price_batch(wcg_batch, rows)
+                    else:
+                        report = pricing.price_batch(wcg_batch, rows)
+                    break
+                except Exception:
+                    if resilience is None:
+                        raise
         if report is None:
             # pricing exhausted its retries: without prices no honest
             # event can be emitted — restore and let the broker contain
@@ -622,21 +696,29 @@ def tick_sessions(
     # ---- success: counters, stores, state install (infallible) ---------
     # degraded rows count as misses (they did miss; the fallback is a
     # served answer, not a cache hit) and never store
-    cache.record_many(
-        hits=len(hit_idx), misses=len(solve_idx) + len(deg_idx)
-    )
-    cache.record_many(hits=len(fol_idx))  # followers hit the rep's store
-    for slot, i in enumerate(solve_idx):
-        if faults is not None:
-            d = faults.decide("cache_store", tick, slot)
-            if d.fires:
-                n_faults += 1
-                if d.kind == "latency":
-                    _charge(d.delay_s)
-                else:
-                    continue  # store dropped: the bin re-solves later
-        cache.store(solve_keys[slot], rows[i])
-    batch.commit_step(due, rows, new_min_cuts)
+    with _span("stage.commit", stores=len(solve_idx), tick=tick):
+        cache.record_many(
+            hits=len(hit_idx), misses=len(solve_idx) + len(deg_idx)
+        )
+        cache.record_many(hits=len(fol_idx))  # followers hit rep's store
+        for slot, i in enumerate(solve_idx):
+            if faults is not None:
+                d = faults.decide("cache_store", tick, slot)
+                if d.fires:
+                    n_faults += 1
+                    _event(
+                        "fault",
+                        site="cache_store",
+                        kind=d.kind,
+                        tick=tick,
+                        index=slot,
+                    )
+                    if d.kind == "latency":
+                        _charge(d.delay_s)
+                    else:
+                        continue  # store dropped: the bin re-solves later
+            cache.store(solve_keys[slot], rows[i])
+        batch.commit_step(due, rows, new_min_cuts)
     degraded_rows = None
     if deg_idx:
         # roll the quarantined sessions' decision state back to the

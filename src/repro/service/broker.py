@@ -107,6 +107,8 @@ from repro.core.placement_cache import (
     PlacementCache,
     profile_fingerprint,
 )
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_SPAN, Tracer
 from repro.service.faults import FaultInjector, InjectedFault, poison_batch
 from repro.service.resilience import ResiliencePolicy
 from repro.service.scheduler import QueueEntry, WeightedFairScheduler
@@ -215,6 +217,26 @@ class TickReport:
     timed_out: int = 0      # futures resolved as timed-out this tick
 
 
+# TickReport field → BrokerTelemetry aggregate attribute (they differ in
+# a few names); used to seed registry views from pre-bind history
+_TEL_FIELD = {
+    "requests": "requests",
+    "cache_hits": "cache_hits",
+    "coalesced": "coalesced",
+    "solved": "solved",
+    "dispatches": "dispatches",
+    "elastic": "elastic_requests",
+    "rejected": "rejected_requests",
+    "batch_sessions": "batch_sessions",
+    "batch_solved": "batch_solved",
+    "faults": "faults",
+    "retries": "retries",
+    "breaker_trips": "breaker_trips",
+    "degraded": "degraded_replies",
+    "timed_out": "timed_out_requests",
+}
+
+
 @dataclasses.dataclass
 class BrokerTelemetry:
     """Aggregated across ticks; ``reports`` keeps a bounded recent window."""
@@ -238,8 +260,79 @@ class BrokerTelemetry:
     total_latency_s: float = 0.0
     reports: list[TickReport] = dataclasses.field(default_factory=list)
     keep_reports: int = 256
+    # export plane (None = legacy standalone counters).  Once bound, every
+    # legacy field is a view over a registry counter: record() increments
+    # both from the same TickReport, so `telemetry.requests` and
+    # `registry.value("broker_requests")` can never disagree (asserted by
+    # tests/test_observability.py), and the registry additionally carries
+    # the tick-latency histogram the plain fields never had.
+    metrics: "MetricsRegistry | None" = None
+
+    # TickReport field → registry counter, the mirrored-view schema
+    _COUNTER_VIEWS = (
+        ("requests", "broker_requests"),
+        ("cache_hits", "broker_cache_hits"),
+        ("coalesced", "broker_coalesced"),
+        ("solved", "broker_solved"),
+        ("dispatches", "broker_dispatches"),
+        ("elastic", "broker_elastic_requests"),
+        ("rejected", "broker_rejected_requests"),
+        ("batch_sessions", "broker_batch_sessions"),
+        ("batch_solved", "broker_batch_solved"),
+        ("faults", "broker_faults"),
+        ("retries", "broker_retries"),
+        ("breaker_trips", "broker_breaker_trips"),
+        ("degraded", "broker_degraded_replies"),
+        ("timed_out", "broker_timed_out_requests"),
+    )
+
+    def bind_metrics(self, registry: "MetricsRegistry") -> None:
+        """Attach the export plane; counters/histograms mirror every
+        subsequent :meth:`record` (pre-bind history is seeded so views
+        stay equal to the legacy fields)."""
+        self.metrics = registry
+        registry.counter("broker_ticks").inc(self.ticks)
+        for field, counter in self._COUNTER_VIEWS:
+            total = getattr(self, _TEL_FIELD[field])
+            if total:
+                registry.counter(counter).inc(total)
+
+    def tick_latency_quantiles(self) -> tuple[float, float, float]:
+        """(p50, p90, p99) tick latency from the bound registry histogram
+        (zeros while unbound or before the first tick)."""
+        if self.metrics is None:
+            return (0.0, 0.0, 0.0)
+        h = self.metrics.get_histogram("broker_tick_latency_s")
+        if h is None:
+            return (0.0, 0.0, 0.0)
+        return (h.p50, h.p90, h.p99)
+
+    def _bound_instruments(self):
+        """Resolve (and cache) the mirrored instruments: the per-tick
+        hot path must not pay a registry lookup per counter."""
+        b = self.__dict__.get("_instr")
+        if b is None or b[0] is not self.metrics:
+            reg = self.metrics
+            b = (
+                reg,
+                reg.counter("broker_ticks"),
+                tuple(
+                    (field, reg.counter(c)) for field, c in self._COUNTER_VIEWS
+                ),
+                reg.histogram("broker_tick_latency_s"),
+            )
+            self.__dict__["_instr"] = b
+        return b
 
     def record(self, report: TickReport) -> None:
+        if self.metrics is not None:
+            _, ticks_c, views, latency_h = self._bound_instruments()
+            ticks_c.inc()
+            for field, counter in views:
+                v = getattr(report, field)
+                if v:
+                    counter.inc(v)
+            latency_h.observe(report.latency_s)
         self.ticks += 1
         self.requests += report.requests
         self.cache_hits += report.cache_hits
@@ -372,6 +465,26 @@ class OffloadBroker:
                 (chaos testing and the faults benchmark).  With
                 ``rate=0`` or ``enabled=False`` every broker event is
                 bit-identical to a broker without an injector.
+      tracer:   optional :class:`~repro.obs.trace.Tracer` — the tick
+                emits per-stage spans (materialize, cache probe, per-
+                bucket solve flush, pricing, commit, batch groups) and
+                tags fault/retry/breaker/degraded/timed-out events onto
+                the active span, so a degraded reply in an exported
+                trace is attributable to the exact injected fault.
+      metrics:  optional :class:`~repro.obs.metrics.MetricsRegistry` —
+                telemetry counters mirror into it
+                (:meth:`BrokerTelemetry.bind_metrics`), tick latency
+                feeds a quantile histogram, tenant caches bind
+                hit/miss/eviction counters, solver dispatches record
+                per-(backend, bucket) timing, and scheduler queue
+                depth / queued bins / per-tenant deficits publish as
+                gauges each tick.
+
+    ``tracer``/``metrics`` are pure observers: with both detached
+    (default) every instrumented path is bit-identical to the
+    pre-observability broker (asserted by
+    ``tests/test_observability.py``), and neither ever reads the
+    broker's ``clock`` (the tracer keeps its own).
     """
 
     def __init__(
@@ -383,6 +496,8 @@ class OffloadBroker:
         max_queued_bins: int | None = None,
         resilience: ResiliencePolicy | None = None,
         fault_injector: FaultInjector | None = None,
+        tracer: Tracer | None = None,
+        metrics: MetricsRegistry | None = None,
     ):
         if backend not in ("reference", "jax", "pallas"):
             raise ValueError(f"unknown MCOP batch backend: {backend!r}")
@@ -391,7 +506,12 @@ class OffloadBroker:
         self.clock = clock
         self.resilience = resilience
         self.fault_injector = fault_injector
+        self.tracer = tracer
+        self.metrics = metrics
+        self._obs_gauges = None  # cached gauge instruments (see tick)
         self.telemetry = BrokerTelemetry()
+        if metrics is not None:
+            self.telemetry.bind_metrics(metrics)
         self._tenants: dict[str, _Tenant] = {}
         self._scheduler = WeightedFairScheduler(max_queued_bins=max_queued_bins)
         self._batch_groups: list = []  # BatchSessionGroup, registration order
@@ -448,6 +568,8 @@ class OffloadBroker:
         tenant = _Tenant(name, profile, cost_model, cache, fingerprint, weight)
         if warm_start is not None:
             cache.load(warm_start, fingerprint=fingerprint)
+        if self.metrics is not None:
+            cache.bind_metrics(self.metrics, tenant=name)
         self._tenants[name] = tenant
         self._scheduler.ensure_tenant(name, weight=weight)
         if adaptive_weight:
@@ -525,6 +647,12 @@ class OffloadBroker:
         )
         if not admitted:
             self._rejected_since_tick += 1
+            self._event(
+                "rejected",
+                tenant=r.tenant.name,
+                tick=self._tick,
+                reason="backpressure",
+            )
             r.future.set(
                 BrokerReply(
                     None,
@@ -662,89 +790,137 @@ class OffloadBroker:
         """
         t0 = self.clock()
         self._tick += 1
-        # deadline sweep BEFORE draining: an overdue request must resolve
-        # as timed_out, not be served late (the sweep only ever runs once
-        # a deadline has actually been armed, so deadline-free brokers pay
-        # nothing and stay bit-identical to the historical tick)
-        timed_out = 0
-        if self._deadlines_armed:
-            for e in self._scheduler.expire(
-                lambda e: e.item.expires is not None
-                and e.item.expires < self._tick
-            ):
-                if not e.item.future.done:
-                    e.item.future.set(
-                        BrokerReply(
-                            None,
-                            cache_hit=False,
-                            coalesced=False,
-                            tick=self._tick,
-                            timed_out=True,
+        with self._span("broker.tick", tick=self._tick) as root:
+            # deadline sweep BEFORE draining: an overdue request must
+            # resolve as timed_out, not be served late (the sweep only ever
+            # runs once a deadline has actually been armed, so deadline-free
+            # brokers pay nothing and stay bit-identical to the historical
+            # tick)
+            timed_out = 0
+            if self._deadlines_armed:
+                for e in self._scheduler.expire(
+                    lambda e: e.item.expires is not None
+                    and e.item.expires < self._tick
+                ):
+                    if not e.item.future.done:
+                        e.item.future.set(
+                            BrokerReply(
+                                None,
+                                cache_hit=False,
+                                coalesced=False,
+                                tick=self._tick,
+                                timed_out=True,
+                            )
                         )
-                    )
-                    timed_out += 1
-        depth = self._scheduler.pending
-        entries = self._scheduler.drain(budget)
-        requests = [e.item for e in entries]
-        ctx = (
-            _TickCtx(
-                self.fault_injector,
-                self.resilience,
-                self._backoff_sleep,
-                entry_of={id(e.item): e for e in entries},
+                        timed_out += 1
+                        self._event(
+                            "timed_out",
+                            tenant=e.item.tenant.name,
+                            tick=self._tick,
+                        )
+            depth = self._scheduler.pending
+            entries = self._scheduler.drain(budget)
+            requests = [e.item for e in entries]
+            ctx = (
+                _TickCtx(
+                    self.fault_injector,
+                    self.resilience,
+                    self._backoff_sleep,
+                    entry_of={id(e.item): e for e in entries},
+                )
+                if self.resilience is not None
+                or self.fault_injector is not None
+                else None
             )
-            if self.resilience is not None or self.fault_injector is not None
-            else None
-        )
-        try:
-            # materialization is inside the containment: a failing deferred
-            # build (bad environment) must re-queue innocents, not drop them
-            self._materialize(requests, ctx)
-            report = self._run_tick(requests, depth, ctx)
-        except BaseException as err:
-            self._scheduler.requeue(
-                e for e in entries if not e.item.future.done
-            )
-            if self.resilience is None or not isinstance(err, Exception):
-                raise
-            # resilient backstop: an error that escaped the per-bucket
-            # quarantine is still contained — unresolved requests are
-            # already back at the front of the queue for the next tick
+            try:
+                # materialization is inside the containment: a failing
+                # deferred build (bad environment) must re-queue innocents,
+                # not drop them
+                self._materialize(requests, ctx)
+                report = self._run_tick(requests, depth, ctx)
+            except BaseException as err:
+                self._scheduler.requeue(
+                    e for e in entries if not e.item.future.done
+                )
+                if self.resilience is None or not isinstance(err, Exception):
+                    raise
+                # resilient backstop: an error that escaped the per-bucket
+                # quarantine is still contained — unresolved requests are
+                # already back at the front of the queue for the next tick
+                if ctx is not None:
+                    ctx.faults += 1
+                self._event(
+                    "tick_contained", tick=self._tick, error=type(err).__name__
+                )
+                report = TickReport(
+                    tick=self._tick,
+                    queue_depth=depth,
+                    requests=len(requests),
+                    cache_hits=0,
+                    coalesced=0,
+                    solved=0,
+                    dispatches=0,
+                    buckets=(),
+                    latency_s=0.0,
+                    elastic=sum(r.lane == "elastic" for r in requests),
+                    rejected=self._rejected_since_tick,
+                    shares=(),
+                )
+            # batched session groups tick after the request queue: each is
+            # one vectorized tick_sessions call, atomic on its own (a
+            # failing group keeps its staged observation for retry and does
+            # not disturb the already-resolved request futures above)
+            report = self._tick_batches(report, ctx)
             if ctx is not None:
-                ctx.faults += 1
-            report = TickReport(
-                tick=self._tick,
-                queue_depth=depth,
-                requests=len(requests),
-                cache_hits=0,
-                coalesced=0,
-                solved=0,
-                dispatches=0,
-                buckets=(),
-                latency_s=0.0,
-                elastic=sum(r.lane == "elastic" for r in requests),
-                rejected=self._rejected_since_tick,
-                shares=(),
+                report = dataclasses.replace(
+                    report,
+                    faults=ctx.faults,
+                    retries=ctx.retries,
+                    breaker_trips=ctx.breaker_trips,
+                    degraded=ctx.degraded,
+                )
+            if timed_out:
+                report = dataclasses.replace(report, timed_out=timed_out)
+            report = dataclasses.replace(report, latency_s=self.clock() - t0)
+            self._rejected_since_tick = 0
+            self.telemetry.record(report)
+            root.set(
+                queue_depth=report.queue_depth,
+                requests=report.requests,
+                cache_hits=report.cache_hits,
+                coalesced=report.coalesced,
+                solved=report.solved,
+                dispatches=report.dispatches,
+                degraded=report.degraded,
+                timed_out=report.timed_out,
+                faults=report.faults,
             )
-        # batched session groups tick after the request queue: each is one
-        # vectorized tick_sessions call, atomic on its own (a failing group
-        # keeps its staged observation for retry and does not disturb the
-        # already-resolved request futures above)
-        report = self._tick_batches(report, ctx)
-        if ctx is not None:
-            report = dataclasses.replace(
-                report,
-                faults=ctx.faults,
-                retries=ctx.retries,
-                breaker_trips=ctx.breaker_trips,
-                degraded=ctx.degraded,
-            )
-        if timed_out:
-            report = dataclasses.replace(report, timed_out=timed_out)
-        report = dataclasses.replace(report, latency_s=self.clock() - t0)
-        self._rejected_since_tick = 0
-        self.telemetry.record(report)
+        if self.metrics is not None:
+            self._publish_gauges()
         return report
+
+    def _publish_gauges(self) -> None:
+        """Post-tick scheduler gauges (cached instruments: no registry
+        lookups on the per-tick path)."""
+        g = self._obs_gauges
+        if g is None:
+            g = self._obs_gauges = (
+                self.metrics.gauge("broker_queue_depth"),
+                self.metrics.gauge("broker_queued_bins"),
+                {},  # tenant -> (deficit gauge, weight gauge)
+            )
+        g[0].set(self._scheduler.pending)
+        g[1].set(self._scheduler.queued_bins)
+        per_tenant = g[2]
+        for name, deficit in self._scheduler.deficits().items():
+            pair = per_tenant.get(name)
+            if pair is None:
+                pair = per_tenant[name] = (
+                    self.metrics.gauge("scheduler_deficit", tenant=name),
+                    self.metrics.gauge("scheduler_weight", tenant=name),
+                )
+            pair[0].set(deficit)
+            pair[1].set(self._scheduler.weight(name))
 
     def drain(self) -> int:
         """Resolve every still-queued future as ``rejected`` (shutdown).
@@ -788,6 +964,27 @@ class OffloadBroker:
         else:
             time.sleep(seconds)
 
+    # -- observability guards (None tracer/registry compile away to no-ops
+    # -- without ever touching a clock: the broker's injected clock must be
+    # -- read exactly twice per tick with or without instrumentation) --
+    def _span(self, name: str, **attrs):
+        return (
+            self.tracer.span(name, **attrs)
+            if self.tracer is not None
+            else NULL_SPAN
+        )
+
+    def _event(self, name: str, **attrs) -> None:
+        if self.tracer is not None:
+            self.tracer.event(name, **attrs)
+
+    def _timer(self, name: str, **labels):
+        return (
+            self.metrics.timer(name, **labels)
+            if self.metrics is not None
+            else NULL_SPAN
+        )
+
     def _tick_batches(
         self, report: TickReport, ctx: _TickCtx | None = None
     ) -> TickReport:
@@ -806,20 +1003,27 @@ class OffloadBroker:
         groups = sessions = hits = solved = 0
         for group in staged:
             g0 = self.clock()
-            try:
-                group_report = group._tick()
-            except Exception:
-                # resilient brokers contain a failing group to its own
-                # failure domain: the staged observation is kept (the
-                # group retries next tick) and healthy groups still run
-                if self.resilience is None:
-                    raise
-                if ctx is not None:
-                    ctx.faults += 1
-                self._scheduler.observe_latency(
-                    group.tenant, self.clock() - g0
-                )
-                continue
+            with self._span("stage.batch_group", tenant=group.tenant):
+                try:
+                    group_report = group._tick()
+                except Exception as err:
+                    # resilient brokers contain a failing group to its own
+                    # failure domain: the staged observation is kept (the
+                    # group retries next tick) and healthy groups still run
+                    if self.resilience is None:
+                        raise
+                    if ctx is not None:
+                        ctx.faults += 1
+                    self._event(
+                        "group_contained",
+                        tenant=group.tenant,
+                        tick=self._tick,
+                        error=type(err).__name__,
+                    )
+                    self._scheduler.observe_latency(
+                        group.tenant, self.clock() - g0
+                    )
+                    continue
             self._scheduler.observe_latency(group.tenant, self.clock() - g0)
             if group_report is None:
                 continue
@@ -865,6 +1069,18 @@ class OffloadBroker:
         for r in requests:
             if r.g is None:
                 deferred.setdefault(r.tenant.name, []).append(r)
+        if not deferred:
+            return
+        with self._span(
+            "stage.materialize",
+            tenants=len(deferred),
+            requests=sum(len(rs) for rs in deferred.values()),
+        ):
+            self._materialize_deferred(deferred, ctx)
+
+    def _materialize_deferred(
+        self, deferred: dict[str, list[_Request]], ctx: _TickCtx | None
+    ) -> None:
         for name, rs in deferred.items():
             if ctx is not None and ctx.policy is not None:
                 kept = []
@@ -876,6 +1092,12 @@ class OffloadBroker:
                         kept.append(r)
                         continue
                     self._rejected_since_tick += 1
+                    self._event(
+                        "rejected",
+                        tenant=name,
+                        tick=self._tick,
+                        reason="non_finite_env",
+                    )
                     r.future.set(
                         BrokerReply(
                             None,
@@ -937,6 +1159,13 @@ class OffloadBroker:
             d = ctx.injector.decide("cache_load", self._tick, index)
             if d.fires:
                 ctx.faults += 1
+                self._event(
+                    "fault",
+                    site="cache_load",
+                    kind=d.kind,
+                    tick=self._tick,
+                    index=index,
+                )
                 if d.kind == "latency":
                     ctx.sleep(d.delay_s)
                 else:
@@ -956,6 +1185,13 @@ class OffloadBroker:
             d = ctx.injector.decide("cache_store", self._tick, slot)
             if d.fires:
                 ctx.faults += 1
+                self._event(
+                    "fault",
+                    site="cache_store",
+                    kind=d.kind,
+                    tick=self._tick,
+                    index=slot,
+                )
                 if d.kind == "latency":
                     ctx.sleep(d.delay_s)
                 else:
@@ -974,12 +1210,16 @@ class OffloadBroker:
         only) — the caller degrades those rows to fallback replies.
         """
         if ctx is None:
-            return self._price_rows(graphs, masks)
+            with self._timer("broker_price_duration_s"):
+                return self._price_rows(graphs, masks)
         base = ctx.price_seq
         ctx.price_seq += ctx.attempts
         for attempt in range(ctx.attempts):
             if attempt:
                 ctx.retries += 1
+                self._event(
+                    "retry", site="pricing", attempt=attempt, tick=self._tick
+                )
                 if ctx.policy is not None:
                     ctx.sleep(ctx.policy.retry.backoff(attempt - 1))
             try:
@@ -989,13 +1229,21 @@ class OffloadBroker:
                     )
                     if d.fires:
                         ctx.faults += 1
+                        self._event(
+                            "fault",
+                            site="pricing",
+                            kind=d.kind,
+                            tick=self._tick,
+                            index=base + attempt,
+                        )
                         if d.kind == "latency":
                             ctx.sleep(d.delay_s)
                         else:
                             raise InjectedFault(
                                 "pricing", self._tick, base + attempt, d.kind
                             )
-                return self._price_rows(graphs, masks)
+                with self._timer("broker_price_duration_s"):
+                    return self._price_rows(graphs, masks)
             except Exception:
                 if ctx.policy is None:
                     raise
@@ -1015,12 +1263,22 @@ class OffloadBroker:
         quarantines exactly this bucket's requests, nothing else.
         """
         if ctx is None:
-            return mcop_batch(wb, backend=self.backend, buckets=(m,))
+            with self._timer(
+                "mcop_dispatch_duration_s", backend=self.backend, bucket=m
+            ):
+                return mcop_batch(wb, backend=self.backend, buckets=(m,))
         policy = ctx.policy
         breaker = policy.breaker if policy is not None else None
         for attempt in range(ctx.attempts):
             if attempt:
                 ctx.retries += 1
+                self._event(
+                    "retry",
+                    site="solve",
+                    attempt=attempt,
+                    bucket=m,
+                    tick=self._tick,
+                )
                 if policy is not None:
                     ctx.sleep(policy.retry.backoff(attempt - 1))
             backend = (
@@ -1036,6 +1294,14 @@ class OffloadBroker:
                     d = ctx.injector.decide("solve", self._tick, index)
                     if d.fires:
                         ctx.faults += 1
+                        self._event(
+                            "fault",
+                            site="solve",
+                            kind=d.kind,
+                            tick=self._tick,
+                            index=index,
+                            bucket=m,
+                        )
                         if d.kind == "latency":
                             ctx.sleep(d.delay_s)
                         elif d.kind == "error":
@@ -1043,7 +1309,10 @@ class OffloadBroker:
                         else:
                             use = poison_batch(wb)
                 use.validate_finite()
-                out = mcop_batch(use, backend=backend, buckets=(m,))
+                with self._timer(
+                    "mcop_dispatch_duration_s", backend=backend, bucket=m
+                ):
+                    out = mcop_batch(use, backend=backend, buckets=(m,))
                 if not all(math.isfinite(res.min_cut) for res in out):
                     raise RuntimeError(
                         "non-finite min_cut from solver dispatch"
@@ -1056,6 +1325,12 @@ class OffloadBroker:
                     backend, self._tick
                 ):
                     ctx.breaker_trips += 1
+                    self._event(
+                        "breaker_trip",
+                        backend=backend,
+                        bucket=m,
+                        tick=self._tick,
+                    )
                 if policy is None:
                     raise
         return None
@@ -1092,6 +1367,12 @@ class OffloadBroker:
         if count:
             r.tenant.cache.record(False)
         ctx.degraded += 1
+        self._event(
+            "degraded",
+            tenant=r.tenant.name,
+            tick=self._tick,
+            stale=mask is not None,
+        )
         r.future.set(
             BrokerReply(
                 res,
@@ -1134,28 +1415,33 @@ class OffloadBroker:
         # be handed a wrong-length mask (mirrors the cache's expected_n)
         rep_slot: dict[tuple[str, int, tuple[int, ...]], int] = {}
         followers: dict[int, list[_Request]] = {}
-        for i, r in enumerate(requests):
-            mask = self._cache_lookup(r, i, ctx)
-            if mask is not None:
-                r.tenant.cache.record(True)
-                hits += 1
-                hit_rows.append((r, mask))
-                continue
-            slot_key = (r.tenant.name, r.g.n, r.key)
-            if slot_key in rep_slot:
-                coalesced += 1
-                followers.setdefault(rep_slot[slot_key], []).append(r)
-                continue
-            rep_slot[slot_key] = len(solves)
-            solves.append(r)
+        with self._span("stage.cache_probe", requests=len(requests)) as probe:
+            for i, r in enumerate(requests):
+                mask = self._cache_lookup(r, i, ctx)
+                if mask is not None:
+                    r.tenant.cache.record(True)
+                    hits += 1
+                    hit_rows.append((r, mask))
+                    continue
+                slot_key = (r.tenant.name, r.g.n, r.key)
+                if slot_key in rep_slot:
+                    coalesced += 1
+                    followers.setdefault(rep_slot[slot_key], []).append(r)
+                    continue
+                rep_slot[slot_key] = len(solves)
+                solves.append(r)
+            probe.set(hits=hits, coalesced=coalesced, misses=len(solves))
 
         # cache hits are priced in ONE vectorized evaluation per graph
         # size and resolved BEFORE any solver dispatch — a failing
         # dispatch must not strand futures the cache already answered
         if hit_rows:
-            priced = self._priced_rows(
-                [r.g for r, _ in hit_rows], [m for _, m in hit_rows], ctx
-            )
+            with self._span(
+                "stage.pricing", phase="hits", rows=len(hit_rows)
+            ):
+                priced = self._priced_rows(
+                    [r.g for r, _ in hit_rows], [m for _, m in hit_rows], ctx
+                )
             if priced is None:
                 # pricing exhausted its retries: the hits were already
                 # counted at classification, serve each the fallback
@@ -1188,10 +1474,21 @@ class OffloadBroker:
         dispatched_buckets: list[int] = []
         quarantined: list[int] = []
         for m, idxs in sorted(by_bucket.items()):
-            batch = self._dispatch(
-                WCGBatch.from_wcgs([solves[i].g for i in idxs], m=m), m, ctx
-            )
+            with self._span(
+                "stage.solve_flush",
+                bucket=m,
+                batch=len(idxs),
+                backend=self.backend,
+            ):
+                batch = self._dispatch(
+                    WCGBatch.from_wcgs([solves[i].g for i in idxs], m=m),
+                    m,
+                    ctx,
+                )
             if batch is None:
+                self._event(
+                    "quarantine", bucket=m, requests=len(idxs), tick=self._tick
+                )
                 quarantined.extend(idxs)
                 continue
             dispatches += 1
@@ -1219,11 +1516,13 @@ class OffloadBroker:
             for s, fs in followers.items()
             if solved[s] is not None
         }
-        priced = (
-            self._priced_rows(row_graphs, row_masks, ctx)
-            if row_graphs
-            else (np.zeros(0), np.zeros(0))
-        )
+        if row_graphs:
+            with self._span(
+                "stage.pricing", phase="followers", rows=len(row_graphs)
+            ):
+                priced = self._priced_rows(row_graphs, row_masks, ctx)
+        else:
+            priced = (np.zeros(0), np.zeros(0))
         # follower repricing degraded: reps still commit below, and each
         # follower falls back (its stale probe then finds the mask its
         # representative just stored — still the freshest safe answer)
@@ -1234,36 +1533,45 @@ class OffloadBroker:
         # the retry must not double-count them (a serial shared-cache loop
         # would count each request exactly once).  Followers count as hits:
         # serially they would have hit the representative's put().
-        for slot, r in enumerate(solves):
-            if solved[slot] is None:
-                continue  # quarantined bucket, handled below
-            # §4.3 clamp against the baseline; the reply keeps the solver's
-            # own cut value (shared helper with the serial path)
-            rep_clamped = rep_no_off[slot] < solved[slot].min_cut
-            candidate = baselines.clamp_no_offloading_priced(
-                solved[slot], rep_no_off[slot]
-            )
-            r.tenant.cache.record(False)
-            self._cache_store(r, slot, candidate.local_mask, ctx)
-            r.future.set(self._reply(candidate, cache_hit=False, coalesced=False))
-            for f, fi in zip(followers.get(slot, ()), fol_rows.get(slot, ())):
-                if partial is None:
-                    self._fallback_reply(f, ctx, coalesced=True)
-                    continue
-                # a clamped representative hands followers the all-local
-                # mask, whose price is exactly the no-offload baseline
-                if rep_clamped:
-                    res = MCOPResult(
-                        min_cut=float(no_off[fi]),
-                        local_mask=np.ones(f.g.n, dtype=bool),
-                        phases=[],
+        with self._span("stage.commit", representatives=len(solves)):
+            for slot, r in enumerate(solves):
+                if solved[slot] is None:
+                    continue  # quarantined bucket, handled below
+                # §4.3 clamp against the baseline; the reply keeps the
+                # solver's own cut value (shared helper with the serial path)
+                rep_clamped = rep_no_off[slot] < solved[slot].min_cut
+                candidate = baselines.clamp_no_offloading_priced(
+                    solved[slot], rep_no_off[slot]
+                )
+                r.tenant.cache.record(False)
+                self._cache_store(r, slot, candidate.local_mask, ctx)
+                r.future.set(
+                    self._reply(candidate, cache_hit=False, coalesced=False)
+                )
+                for f, fi in zip(
+                    followers.get(slot, ()), fol_rows.get(slot, ())
+                ):
+                    if partial is None:
+                        self._fallback_reply(f, ctx, coalesced=True)
+                        continue
+                    # a clamped representative hands followers the all-local
+                    # mask, whose price is exactly the no-offload baseline
+                    if rep_clamped:
+                        res = MCOPResult(
+                            min_cut=float(no_off[fi]),
+                            local_mask=np.ones(f.g.n, dtype=bool),
+                            phases=[],
+                        )
+                    else:
+                        res = baselines.reprice_clamped_priced(
+                            float(partial[fi]),
+                            float(no_off[fi]),
+                            row_masks[fi],
+                        )
+                    f.tenant.cache.record(True)
+                    f.future.set(
+                        self._reply(res, cache_hit=True, coalesced=True)
                     )
-                else:
-                    res = baselines.reprice_clamped_priced(
-                        float(partial[fi]), float(no_off[fi]), row_masks[fi]
-                    )
-                f.tenant.cache.record(True)
-                f.future.set(self._reply(res, cache_hit=True, coalesced=True))
 
         for slot in quarantined:
             self._quarantine(

@@ -333,3 +333,9 @@ class WeightedFairScheduler:
     def pending_for(self, tenant: str) -> int:
         q = self._queues.get(tenant)
         return len(q) if q is not None else 0
+
+    def deficits(self) -> dict[str, float]:
+        """Per-tenant DRR deficit balances (copy) — the fairness gauge a
+        dashboard watches: a persistently high deficit means the tenant
+        keeps earning credit it cannot spend inside the tick budget."""
+        return dict(self._deficit)

@@ -244,6 +244,8 @@ class BatchSessionGroup:
             resilience=self.broker.resilience,
             tick=self.broker._tick,
             sleep=self.broker._backoff_sleep,
+            tracer=self.broker.tracer,
+            metrics=self.broker.metrics,
         )
         self._staged = None
         self._reports.append(report)

@@ -1,0 +1,224 @@
+#!/usr/bin/env python
+"""Offline trace summarizer for ``Tracer.export_jsonl`` traces (stdlib).
+
+    PYTHONPATH=src python tools/tracequery.py TRACE.jsonl [options]
+
+Reads the one-span-per-line JSONL a :class:`repro.obs.trace.Tracer`
+exports and answers the questions a trace exists for:
+
+* ``--slowest N``     the N slowest ``broker.tick`` spans (tick number,
+                      duration, request/degraded counts).
+* ``--stages``        per-stage breakdown: span count, total and mean
+                      duration per span name, sorted by total.
+* ``--provenance``    degraded-reply provenance: every ``degraded``
+                      event next to the fault/retry/breaker events of
+                      the same tick — the "why did this user get the
+                      fallback plan" view.
+* ``--audit``         CI gate: exit non-zero unless EVERY ``degraded``
+                      event has at least one matching ``fault`` event
+                      in-trace (same tick), i.e. every degraded reply
+                      is attributable to an injected fault.
+* ``--json``          machine-readable summary document instead of text.
+
+With no option flags, prints all three human-readable sections.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def load_spans(path: pathlib.Path) -> list[dict]:
+    """Parse a JSONL trace; malformed lines are skipped with a warning
+    (a truncated artifact should degrade the report, not crash it)."""
+    spans: list[dict] = []
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            doc = json.loads(line)
+        except json.JSONDecodeError:
+            print(f"warning: {path}:{lineno}: unparseable line skipped",
+                  file=sys.stderr)
+            continue
+        if isinstance(doc, dict) and doc.get("type") == "span":
+            spans.append(doc)
+    return spans
+
+
+def iter_events(spans: list[dict]):
+    """Yield ``(event_dict, owning_span)`` over every span, including
+    orphan-event spans (exported as zero-duration spans)."""
+    for s in spans:
+        for e in s.get("events", ()):
+            yield e, s
+        if s.get("attrs", {}).get("orphan_event"):
+            yield {"name": s["name"], "ts": s["ts"], "attrs": s["attrs"]}, s
+
+
+def _tick_of(attrs: dict):
+    t = attrs.get("tick")
+    return int(t) if isinstance(t, (int, float)) else None
+
+
+def slowest_ticks(spans: list[dict], n: int) -> list[dict]:
+    ticks = [s for s in spans if s["name"] == "broker.tick"]
+    ticks.sort(key=lambda s: -float(s.get("dur", 0.0)))
+    return [
+        {
+            "tick": _tick_of(s.get("attrs", {})),
+            "dur_s": float(s.get("dur", 0.0)),
+            "requests": s.get("attrs", {}).get("requests"),
+            "degraded": s.get("attrs", {}).get("degraded"),
+            "faults": s.get("attrs", {}).get("faults"),
+        }
+        for s in ticks[:n]
+    ]
+
+
+def stage_breakdown(spans: list[dict]) -> list[dict]:
+    agg: dict[str, list[float]] = {}
+    for s in spans:
+        agg.setdefault(s["name"], []).append(float(s.get("dur", 0.0)))
+    rows = [
+        {
+            "name": name,
+            "count": len(durs),
+            "total_s": sum(durs),
+            "mean_s": sum(durs) / len(durs),
+            "max_s": max(durs),
+        }
+        for name, durs in agg.items()
+    ]
+    rows.sort(key=lambda r: -r["total_s"])
+    return rows
+
+
+def degraded_provenance(spans: list[dict]) -> list[dict]:
+    """One row per ``degraded`` event: the fault/retry/breaker_trip
+    events recorded for the same tick (its causal neighborhood)."""
+    by_tick: dict[int | None, list[dict]] = {}
+    degraded: list[tuple[dict, dict]] = []
+    for e, owner in iter_events(spans):
+        tick = _tick_of(e.get("attrs", {}))
+        if e["name"] in ("fault", "retry", "breaker_trip"):
+            by_tick.setdefault(tick, []).append(e)
+        elif e["name"] == "degraded":
+            degraded.append((e, owner))
+    rows = []
+    for e, owner in degraded:
+        tick = _tick_of(e.get("attrs", {}))
+        causes = by_tick.get(tick, [])
+        rows.append(
+            {
+                "tick": tick,
+                "attrs": e.get("attrs", {}),
+                "span": owner.get("name"),
+                "fault_events": [
+                    c["attrs"] for c in causes if c["name"] == "fault"
+                ],
+                "retry_events": sum(c["name"] == "retry" for c in causes),
+                "breaker_trips": sum(
+                    c["name"] == "breaker_trip" for c in causes
+                ),
+            }
+        )
+    return rows
+
+
+def audit(spans: list[dict]) -> list[dict]:
+    """Degraded events with NO matching same-tick fault event (should be
+    empty: a degraded reply must be attributable to an injected fault)."""
+    return [r for r in degraded_provenance(spans) if not r["fault_events"]]
+
+
+def _fmt_s(x: float) -> str:
+    return f"{x * 1e3:.3f}ms" if x < 1.0 else f"{x:.3f}s"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", type=pathlib.Path)
+    ap.add_argument("--slowest", type=int, metavar="N", default=None)
+    ap.add_argument("--stages", action="store_true")
+    ap.add_argument("--provenance", action="store_true")
+    ap.add_argument("--audit", action="store_true")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    args = ap.parse_args(argv)
+
+    spans = load_spans(args.trace)
+    if not spans:
+        print(f"error: no spans in {args.trace}", file=sys.stderr)
+        return 2
+
+    everything = not (
+        args.slowest is not None
+        or args.stages
+        or args.provenance
+        or args.audit
+    )
+    doc: dict = {"spans": len(spans)}
+    if everything or args.slowest is not None:
+        doc["slowest_ticks"] = slowest_ticks(spans, args.slowest or 5)
+    if everything or args.stages:
+        doc["stages"] = stage_breakdown(spans)
+    if everything or args.provenance:
+        doc["degraded"] = degraded_provenance(spans)
+    orphans = audit(spans) if (args.audit or everything) else None
+
+    if args.as_json:
+        if orphans is not None:
+            doc["unattributed_degraded"] = orphans
+        print(json.dumps(doc, indent=2))
+    else:
+        print(f"{len(spans)} spans in {args.trace}")
+        for row in doc.get("slowest_ticks", ()):
+            print(
+                f"  slow tick {row['tick']}: {_fmt_s(row['dur_s'])}"
+                f"  requests={row['requests']} degraded={row['degraded']}"
+                f" faults={row['faults']}"
+            )
+        if "stages" in doc:
+            print("per-stage breakdown:")
+            for r in doc["stages"]:
+                print(
+                    f"  {r['name']:<22} n={r['count']:<5}"
+                    f" total={_fmt_s(r['total_s'])}"
+                    f" mean={_fmt_s(r['mean_s'])}"
+                    f" max={_fmt_s(r['max_s'])}"
+                )
+        if "degraded" in doc:
+            print(f"degraded replies: {len(doc['degraded'])}")
+            for r in doc["degraded"]:
+                faults = ", ".join(
+                    f"{a.get('site')}/{a.get('kind')}"
+                    for a in r["fault_events"]
+                ) or "NONE"
+                print(
+                    f"  tick {r['tick']} ({r['span']}): {r['attrs']}"
+                    f" ← faults: {faults};"
+                    f" retries={r['retry_events']}"
+                    f" breaker_trips={r['breaker_trips']}"
+                )
+        if orphans is not None:
+            if orphans:
+                print(
+                    f"AUDIT FAIL: {len(orphans)} degraded replies with no"
+                    " same-tick fault event:"
+                )
+                for r in orphans:
+                    print(f"  tick {r['tick']}: {r['attrs']}")
+            else:
+                print("audit ok: every degraded reply has a matching"
+                      " fault event")
+    if args.audit and orphans:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
