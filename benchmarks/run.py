@@ -16,6 +16,10 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
     faults          → fault-tolerance overhead: throughput/p99/degraded
                       fraction at injected fault rates {0%, 1%, 10%}
                       (``REPRO_FAULTS_STEPS=3`` for the CI smoke subset)
+    shard           → sharded solver fleet: µs/graph and tick throughput
+                      at 1/2/4/8 simulated devices, plus compiled-vs-
+                      interpret kernel rows (``REPRO_SHARD_K=64`` for the
+                      CI smoke subset)
     roofline        → §Roofline table from the dry-run artifact
 
 The mcop_backends rows are additionally appended to ``BENCH_mcop.json``,
@@ -50,6 +54,7 @@ from benchmarks import (
     pipeline,
     roofline,
     scale,
+    shard,
 )
 
 MODULES = {
@@ -61,6 +66,7 @@ MODULES = {
     "broker": broker,
     "scale": scale,
     "faults": faults,
+    "shard": shard,
     "compression_ablation": compression_ablation,
     "roofline": roofline,
 }
@@ -74,6 +80,7 @@ _BROKER_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_broker.json"
 _PIPELINE_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_pipeline.json"
 _SCALE_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_scale.json"
 _FAULTS_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_faults.json"
+_SHARD_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_shard.json"
 _TRAJECTORY_KEEP = 50  # bounded history of runs
 
 
@@ -213,6 +220,50 @@ def _smoke_check_trajectory(path: pathlib.Path, benchmark: str) -> None:
                 f"({req_s['rate1pct']:.0f} req/s) fell past 2x of fault-free "
                 f"({req_s['rate0']:.0f} req/s)"
             )
+    if benchmark == "shard":
+        # PR-9 acceptance: the 8-device fleet must deliver ≥2x aggregate
+        # solve throughput over 1 device for the 64-vertex bucket.  The
+        # simulated fleet shares the host's physical cores, so the bar
+        # scales with what the silicon can physically provide: ≥2x with
+        # ≥4 cores, ≥1.3x with 2–3, and waived — loudly, in the artifact
+        # — on single-core hosts (8 simulated devices on 1 core cannot
+        # run in parallel at all).
+        by_name = {row["name"]: row for row in last["rows"]}
+        d_max = max(
+            (int(m.group(1)) for n in by_name if (m := re.match(r"shard/solve_d(\d+)$", n))),
+            default=0,
+        )
+        if "shard/solve_d1" not in by_name or d_max < 2:
+            raise RuntimeError(
+                f"{path.name}: last run lacks the shard/solve_d1 + "
+                "shard/solve_dN sweep rows"
+            )
+        top = by_name[f"shard/solve_d{d_max}"]
+        m = re.search(r"speedup_vs_1=(\d+(?:\.\d+)?)", top["derived"])
+        if m is None:
+            raise RuntimeError(
+                f"{path.name}: shard/solve_d{d_max} derived lacks "
+                f"speedup_vs_1=: {top!r}"
+            )
+        speedup = float(m.group(1))
+        cores = (last.get("env") or {}).get("cpu_count") or os.cpu_count() or 1
+        need = 2.0 if cores >= 4 else (1.3 if cores >= 2 else None)
+        if need is None:
+            if "gate=waived" not in top["derived"]:
+                raise RuntimeError(
+                    f"{path.name}: single-core run must carry an explicit "
+                    f"gate=waived note: {top!r}"
+                )
+        elif speedup < need:
+            raise RuntimeError(
+                f"{path.name}: {speedup:.2f}x aggregate throughput at "
+                f"{d_max} devices is below the {need:.1f}x bar "
+                f"({cores} cores)"
+            )
+        if "shard/kernel_compiled" not in by_name:
+            raise RuntimeError(
+                f"{path.name}: last run lacks the shard/kernel_compiled row"
+            )
 
 
 def main(argv=None) -> int:
@@ -257,6 +308,12 @@ def main(argv=None) -> int:
                 )
                 _smoke_check_trajectory(_FAULTS_TRAJECTORY_PATH, "faults")
                 print("faults/smoke,0.00,BENCH_faults.json ok", flush=True)
+            elif name == "shard":
+                _append_trajectory(
+                    rows, _SHARD_TRAJECTORY_PATH, "shard", wall_s=wall_s
+                )
+                _smoke_check_trajectory(_SHARD_TRAJECTORY_PATH, "shard")
+                print("shard/smoke,0.00,BENCH_shard.json ok", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}/ERROR,0.00,{e!r}", flush=True)

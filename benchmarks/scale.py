@@ -3,19 +3,21 @@
 The PR-6 tentpole number: one :class:`~repro.service.session.BatchSessionGroup`
 holding U sessions is driven through seeded churning traffic
 (:class:`~repro.service.workload.TrafficGenerator` — Poisson arrivals,
-geometric churn) for a few broker ticks at U ∈ {1k, 10k, 100k}, and the
-row reports ticks/sec and µs per user-observation.  Traffic generation
-is pre-computed outside the timed region, and two warm-up ticks absorb
-jit compilation plus the first-tick solve burst, so the number is the
-steady-state tick cost.
+geometric churn) for a few broker ticks at U ∈ {1k, 10k, 100k, 1M}, and
+the row reports ticks/sec and µs per user-observation.  Traffic
+generation is pre-computed outside the timed region, and two warm-up
+ticks absorb jit compilation plus the first-tick solve burst, so the
+number is the steady-state tick cost.
 
 A per-object :class:`~repro.service.session.BrokerSession` baseline runs
 at U=1k; the acceptance criterion — batched µs/user at U=100k strictly
 below the per-object µs/user at U=1k — is asserted here, so a regression
 fails the benchmark run loudly instead of shipping a slow engine.
 
-``REPRO_SCALE_U`` (e.g. ``=1000``) restricts the sweep to one U and
-skips the object baseline/assertion — the CI smoke configuration.
+``REPRO_SCALE_U`` is a *ceiling*: only U values at or below it run, and
+the object baseline/assertion is skipped (the comparison needs the full
+sweep to be meaningful).  ``REPRO_SCALE_U=1000`` is the CI smoke
+configuration — exactly the U=1k point.
 
 Rows are appended to ``BENCH_scale.json`` by ``benchmarks/run.py`` (a
 bounded trajectory, like ``BENCH_broker.json``) and schema-checked after
@@ -35,7 +37,7 @@ from repro.service import (
     user_traces,
 )
 
-U_VALUES = (1_000, 10_000, 100_000)
+U_VALUES = (1_000, 10_000, 100_000, 1_000_000)
 OBJECT_U = 1_000
 STEPS = 5
 WARMUP = 2
@@ -110,7 +112,11 @@ def _time_object(profile: AppProfile, u: int) -> dict:
 def run() -> list[dict]:
     profile = _profile()
     smoke_u = os.environ.get("REPRO_SCALE_U")
-    u_values = (int(smoke_u),) if smoke_u else U_VALUES
+    if smoke_u:
+        ceiling = int(smoke_u)
+        u_values = tuple(u for u in U_VALUES if u <= ceiling) or (ceiling,)
+    else:
+        u_values = U_VALUES
 
     rows = [_time_batch(profile, u) for u in u_values]
     if not smoke_u:

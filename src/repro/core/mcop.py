@@ -503,7 +503,12 @@ def _dispatch_arrays(adj, wl, wc, pin, backend: str, interpret: bool | None):
 
 
 def _solve_wcg_batch(
-    batch: WCGBatch, *, backend: str, interpret: bool | None
+    batch: WCGBatch,
+    *,
+    backend: str,
+    interpret: bool | None,
+    mesh=None,
+    tracer=None,
 ) -> list[MCOPResult]:
     """Array-native entry: a WCGBatch is already one packed bucket."""
     if backend == "reference":
@@ -511,15 +516,32 @@ def _solve_wcg_batch(
     if backend not in ("jax", "pallas"):
         raise ValueError(f"unknown MCOP batch backend: {backend!r}")
     dtype = _solver_dtype(backend)
-    cuts, masks = _dispatch_arrays(
-        jnp.asarray(np.asarray(batch.adj, dtype)),
-        jnp.asarray(np.asarray(batch.w_local, dtype)),
-        jnp.asarray(np.asarray(batch.w_cloud, dtype)),
-        jnp.asarray(batch.anchored_pinned()),
-        backend,
-        interpret,
-    )
-    cuts, masks = jax.device_get((cuts, masks))  # one host sync
+    from repro.core.mcop_shard import resolve_mesh  # deferred: cycle
+
+    use_mesh = resolve_mesh(mesh)
+    if use_mesh is not None:
+        from repro.core.mcop_shard import sharded_dispatch_arrays
+
+        cuts, masks = sharded_dispatch_arrays(
+            np.asarray(batch.adj, dtype),
+            np.asarray(batch.w_local, dtype),
+            np.asarray(batch.w_cloud, dtype),
+            batch.anchored_pinned(),
+            mesh=use_mesh,
+            backend=backend,
+            interpret=interpret,
+            tracer=tracer,
+        )
+    else:
+        cuts, masks = _dispatch_arrays(
+            jnp.asarray(np.asarray(batch.adj, dtype)),
+            jnp.asarray(np.asarray(batch.w_local, dtype)),
+            jnp.asarray(np.asarray(batch.w_cloud, dtype)),
+            jnp.asarray(batch.anchored_pinned()),
+            backend,
+            interpret,
+        )
+        cuts, masks = jax.device_get((cuts, masks))  # one host sync
     return [
         MCOPResult(
             min_cut=float(cuts[i]),
@@ -536,6 +558,8 @@ def mcop_batch(
     backend: str = "jax",
     buckets: Sequence[int] = DEFAULT_BUCKETS,
     interpret: bool | None = None,
+    mesh=None,
+    tracer=None,
 ) -> list[MCOPResult]:
     """Solve many MCOP instances at once; results in input order.
 
@@ -554,6 +578,14 @@ def mcop_batch(
       interpret: Pallas-only — force interpret (True) / compiled (False)
         mode; ``None`` auto-detects (see ``kernels.ops.default_interpret``
         and the ``REPRO_PALLAS_INTERPRET`` env override).
+      mesh:     solver-fleet routing (see ``repro.core.mcop_shard``):
+        ``None`` auto-shards each bucket across the devices the process
+        sees when there is more than one, ``False`` forces the
+        single-device dispatch, a ``Mesh`` shards over exactly that
+        fleet.  Results are bit-identical either way.
+      tracer:   optional :class:`~repro.obs.trace.Tracer` — the sharded
+        path records one ``solve.shard`` span per device (shard index,
+        device count, row count).
     Returns:
       ``list[MCOPResult]`` in input order; ``result[i].local_mask`` is
       ``(n_i,)`` bool over graph ``i``'s ORIGINAL vertices (padding
@@ -567,7 +599,10 @@ def mcop_batch(
     packing pass (``_pack_bucket``) is skipped entirely.
     """
     if isinstance(graphs, WCGBatch):
-        return _solve_wcg_batch(graphs, backend=backend, interpret=interpret)
+        return _solve_wcg_batch(
+            graphs, backend=backend, interpret=interpret, mesh=mesh,
+            tracer=tracer,
+        )
     graphs = list(graphs)
     if backend == "reference":
         return [mcop_reference(g) for g in graphs]
@@ -579,13 +614,26 @@ def mcop_batch(
     for i, g in enumerate(graphs):
         by_bucket.setdefault(_bucket_size(g.n, buckets), []).append(i)
 
+    from repro.core.mcop_shard import resolve_mesh  # deferred: cycle
+
+    use_mesh = resolve_mesh(mesh)
     results: list[MCOPResult | None] = [None] * len(graphs)
     for m, idxs in sorted(by_bucket.items()):
-        adj, wl, wc, pin = (
-            jnp.asarray(a) for a in _pack_bucket([graphs[i] for i in idxs], m, dtype)
-        )
-        cuts, masks = _dispatch_arrays(adj, wl, wc, pin, backend, interpret)
-        cuts, masks = jax.device_get((cuts, masks))  # one host sync
+        packed = _pack_bucket([graphs[i] for i in idxs], m, dtype)
+        if use_mesh is not None:
+            from repro.core.mcop_shard import sharded_dispatch_arrays
+
+            cuts, masks = sharded_dispatch_arrays(
+                *packed,
+                mesh=use_mesh,
+                backend=backend,
+                interpret=interpret,
+                tracer=tracer,
+            )
+        else:
+            adj, wl, wc, pin = (jnp.asarray(a) for a in packed)
+            cuts, masks = _dispatch_arrays(adj, wl, wc, pin, backend, interpret)
+            cuts, masks = jax.device_get((cuts, masks))  # one host sync
         for row, i in enumerate(idxs):
             results[i] = MCOPResult(
                 min_cut=float(cuts[row]),
@@ -610,23 +658,58 @@ _FUSED_SOLVERS: OrderedDict = OrderedDict()
 _FUSED_SOLVERS_CAP = 64
 
 
-def _fused_solver(model, backend: str, interpret: bool | None):
-    key = (type(model), model.fingerprint, backend, interpret)
+def _fused_solver(model, backend: str, interpret: bool | None, mesh=None):
+    key = (type(model), model.fingerprint, backend, interpret, mesh)
     fn = _FUSED_SOLVERS.get(key)
     if fn is not None:
         _FUSED_SOLVERS.move_to_end(key)
     if fn is None:
+        if backend == "pallas_fused":
+            # VMEM-resident build+solve: the kernel constructs each
+            # environment's WCG weights right before its phase loop runs
+            # (no HBM round-trip for the (K, n, n) adjacency batch).
+            from repro.kernels.mcop_phase import (
+                FUSED_MODEL_KINDS,
+                mcop_fused_solve_kernel,
+            )
 
-        def fused(t_local, data_in, data_out, pinned, env):
-            wl, wc, adj = model.batch_weights(t_local, data_in, data_out, env)
-            pin = jnp.broadcast_to(pinned[None, :], wl.shape)
-            if backend == "jax":
-                return jax.vmap(_mcop_batch_impl)(adj, wl, wc, pin)
-            from repro.kernels.mcop_phase import mcop_stoer_wagner_kernel
+            kind = getattr(model, "name", None)
+            if kind not in FUSED_MODEL_KINDS:
+                raise ValueError(
+                    f"backend='pallas_fused' implements the in-kernel weight "
+                    f"build only for cost-model kinds {FUSED_MODEL_KINDS}; "
+                    f"got model {model!r} (name={kind!r}) — use "
+                    f"backend='pallas' for custom models"
+                )
+            omega = float(getattr(model, "omega", 0.5))
 
-            return mcop_stoer_wagner_kernel(adj, wl, wc, pin, interpret=interpret)
+            def fused(t_local, data_in, data_out, pinned, env):
+                env_mat = jnp.stack(list(env), axis=-1)  # EnvArrays → (k, 6)
+                return mcop_fused_solve_kernel(
+                    t_local, data_in, data_out, pinned, env_mat,
+                    kind=kind, omega=omega, interpret=interpret,
+                )
 
-        fn = _FUSED_SOLVERS[key] = jax.jit(fused)
+        else:
+
+            def fused(t_local, data_in, data_out, pinned, env):
+                wl, wc, adj = model.batch_weights(t_local, data_in, data_out, env)
+                pin = jnp.broadcast_to(pinned[None, :], wl.shape)
+                if backend == "jax":
+                    return jax.vmap(_mcop_batch_impl)(adj, wl, wc, pin)
+                from repro.kernels.mcop_phase import mcop_stoer_wagner_kernel
+
+                return mcop_stoer_wagner_kernel(adj, wl, wc, pin, interpret=interpret)
+
+        if mesh is None:
+            fn = jax.jit(fused)
+        else:
+            from repro.core.cost_models import EnvArrays
+            from repro.core.mcop_shard import sharded_fused_solver
+
+            env_struct = jax.tree_util.tree_structure(EnvArrays(*(0,) * 6))
+            fn = sharded_fused_solver(fused, mesh, env_struct)
+        _FUSED_SOLVERS[key] = fn
         while len(_FUSED_SOLVERS) > _FUSED_SOLVERS_CAP:
             _FUSED_SOLVERS.popitem(last=False)
     return fn
@@ -641,6 +724,8 @@ def solve_envs(
     buckets: Sequence[int] = DEFAULT_BUCKETS,
     interpret: bool | None = None,
     metrics=None,
+    mesh=None,
+    tracer=None,
 ) -> list[MCOPResult]:
     """Fused Fig.-1 pipeline: K environments → K placements, one dispatch.
 
@@ -656,16 +741,26 @@ def solve_envs(
         an :class:`~repro.core.cost_models.EnvArrays` holding them as six
         (k,) columns (the batched session engine's form); six scalars per
         environment are all that crosses the host boundary.
-      backend: ``"jax"`` / ``"pallas"`` for the fused program, or
-        ``"reference"`` to route the vectorized host build through the
-        numpy oracle (exact-parity testing).
+      backend: ``"jax"`` / ``"pallas"`` for the fused program,
+        ``"pallas_fused"`` for the VMEM-resident kernel that builds each
+        environment's WCG weights in-kernel immediately before its solve
+        (built-in cost-model kinds only), or ``"reference"`` to route
+        the vectorized host build through the numpy oracle
+        (exact-parity testing).
       buckets: static shape buckets for the padded vertex count.
       interpret: Pallas-only interpret/compiled override.
       metrics: optional :class:`~repro.obs.metrics.MetricsRegistry` —
         when given, each call counts one ``solve_envs_dispatches`` and
         times the dispatch into ``solve_envs_duration_s``, both labeled
-        ``(backend, bucket)``.  ``None`` (default) adds no work and no
-        clock reads.
+        ``(backend, bucket, devices)``.  ``None`` (default) adds no work
+        and no clock reads.
+      mesh:    solver-fleet routing (``repro.core.mcop_shard``):
+        ``None`` auto-shards the K environments across every device the
+        process sees when there is more than one, ``False`` forces the
+        single-device program, a ``Mesh`` shards over exactly that
+        fleet.  Sharded results are bit-identical to unsharded.
+      tracer:  optional :class:`~repro.obs.trace.Tracer` — the sharded
+        path records one ``solve_envs.shard`` span per device.
     Returns:
       ``list[MCOPResult]``, one per environment in input order, masks
       ``(n,)`` bool over the profile's vertices.
@@ -693,13 +788,19 @@ def solve_envs(
     # corrupted environments must be named here, not silently solved
     # (NaN weights partition into garbage) — see NonFiniteWeightError
     validate_env_finite(envs)
+    from repro.core.mcop_shard import resolve_mesh, solver_shards  # deferred
+
+    use_mesh = None if backend == "reference" else resolve_mesh(mesh)
+    devices = 1 if use_mesh is None else solver_shards(use_mesh)
     if metrics is not None:
         bucket = _bucket_size(profile.n, buckets)
         metrics.counter(
-            "solve_envs_dispatches", backend=backend, bucket=bucket
+            "solve_envs_dispatches",
+            backend=backend, bucket=bucket, devices=devices,
         ).inc()
         timer = metrics.timer(
-            "solve_envs_duration_s", backend=backend, bucket=bucket
+            "solve_envs_duration_s",
+            backend=backend, bucket=bucket, devices=devices,
         )
     else:
         from repro.obs.trace import NULL_SPAN as timer
@@ -709,7 +810,7 @@ def solve_envs(
                 mcop_reference(g)
                 for g in model.build_batch(profile, envs).to_wcgs()
             ]
-    if backend not in ("jax", "pallas"):
+    if backend not in ("jax", "pallas", "pallas_fused"):
         raise ValueError(f"unknown MCOP batch backend: {backend!r}")
     dtype = _solver_dtype(backend)
     n = profile.n
@@ -729,18 +830,35 @@ def solve_envs(
     if not pinned[:n].any():
         pinned[0] = True
 
-    fn = _fused_solver(model, backend, interpret)
+    fn = _fused_solver(model, backend, interpret, use_mesh)
+    env_cols = (
+        envs.astype(dtype)
+        if isinstance(envs, EnvArrays)
+        else EnvArrays.from_envs(envs, dtype)
+    )
     with timer:
-        cuts, masks = fn(
-            jnp.asarray(t_local),
-            jnp.asarray(data_in),
-            jnp.asarray(data_out),
-            jnp.asarray(pinned),
-            envs.astype(dtype)
-            if isinstance(envs, EnvArrays)
-            else EnvArrays.from_envs(envs, dtype),
-        )
-        cuts, masks = jax.device_get((cuts, masks))  # one host sync
+        if use_mesh is not None:
+            from repro.core.mcop_shard import sharded_solve_envs_call
+
+            cuts, masks = sharded_solve_envs_call(
+                fn,
+                jnp.asarray(t_local),
+                jnp.asarray(data_in),
+                jnp.asarray(data_out),
+                jnp.asarray(pinned),
+                env_cols,
+                mesh=use_mesh,
+                tracer=tracer,
+            )
+        else:
+            cuts, masks = fn(
+                jnp.asarray(t_local),
+                jnp.asarray(data_in),
+                jnp.asarray(data_out),
+                jnp.asarray(pinned),
+                env_cols,
+            )
+            cuts, masks = jax.device_get((cuts, masks))  # one host sync
     return [
         MCOPResult(min_cut=float(cuts[i]), local_mask=masks[i, :n].copy(), phases=[])
         for i in range(k)

@@ -369,6 +369,7 @@ def tick_sessions(
     sleep=None,
     tracer=None,
     metrics=None,
+    mesh=None,
 ) -> SessionTickReport:
     """One broker tick over all K sessions of ``batch``.
 
@@ -422,6 +423,12 @@ def tick_sessions(
     the tracer, and dispatch timings on the registry.  Both default to
     ``None`` and the instrumented paths then run bit-identically to the
     uninstrumented tick — notably they never read the caller's clock.
+
+    Solver fleet (``mesh``, see ``repro.core.mcop_shard``): ``None``
+    auto-shards the solve flush across every device the process sees,
+    ``False`` forces single-device, a ``Mesh`` shards over that fleet;
+    the flush span carries the resolved device count and the sharded
+    flush is bit-identical to the single-device one.
     """
     if faults is not None or resilience is not None:
         # deferred: the fault vocabulary lives in the service layer
@@ -507,12 +514,17 @@ def tick_sessions(
         # mask below instead of aborting the whole tick.
         solved: list | None = [] if not solve_idx else None
         if solve_idx:
+            from repro.core.mcop_shard import resolve_mesh, solver_shards
+
+            use_mesh = resolve_mesh(mesh)
+            devices = 1 if use_mesh is None else solver_shards(use_mesh)
             sub = envs.take(solve_idx)
             with _span(
                 "stage.solve_flush",
                 batch=len(solve_idx),
                 backend=backend,
                 tick=tick,
+                devices=devices,
             ):
                 for attempt in range(attempts):
                     if attempt:
@@ -554,6 +566,10 @@ def tick_sessions(
                             backend=eff,
                             buckets=buckets,
                             metrics=metrics,
+                            # already resolved: span attr and dispatch
+                            # must agree on the device count
+                            mesh=use_mesh if use_mesh is not None else False,
+                            tracer=tracer,
                         )
                         if not all(np.isfinite(r.min_cut) for r in out):
                             raise RuntimeError(

@@ -65,7 +65,13 @@ try:
 except Exception:  # pragma: no cover
     _VMEM = pl.MemorySpace.ANY  # type: ignore[attr-defined]
 
-__all__ = ["mcop_phase_kernel", "mcop_stoer_wagner_kernel"]
+__all__ = [
+    "mcop_phase_kernel",
+    "mcop_stoer_wagner_kernel",
+    "mcop_fused_solve_kernel",
+    "default_block_graphs",
+    "FUSED_MODEL_KINDS",
+]
 
 # f32-representable sentinels matching the solver backends in core.mcop —
 # graphs priced in FLOPs/bytes can have cuts far above 2**30, so a small
@@ -189,21 +195,17 @@ def mcop_phase_kernel(
 # ======================================================================
 
 
-def _sw_body(
-    adj_ref,   # (1, n, n) f32 — one graph of the batch
-    wl_ref,    # (1, n) f32
-    wc_ref,    # (1, n) f32
-    pin_ref,   # (1, n) f32    1.0 = unoffloadable (pinned to local tier)
-    cut_ref,   # (1, 1) f32    out: min over phases of Eq. 10
-    mask_ref,  # (1, n) f32    out: 1.0 = execute locally
-    *,
-    n: int,
-):
+def _solve_graph(adj, wl, wc, pin, *, n: int):
+    """One graph's full modified Stoer–Wagner, as pure kernel-body math.
+
+    Args are VALUES already resident in VMEM (not refs): ``adj`` (n, n)
+    f32, ``wl``/``wc`` (1, n) f32, ``pin`` (1, n) bool.  Returns
+    ``(best_cut (1, 1) f32, local_mask (1, n) f32)``.  Factoring the
+    solve out of the pallas body lets one program invocation solve a
+    whole *block* of graphs (grid tuning) and lets the fused variant
+    build the WCG weights in VMEM immediately before calling this.
+    """
     f32 = jnp.float32
-    adj = adj_ref[0]
-    wl = wl_ref[...]
-    wc = wc_ref[...]
-    pin = pin_ref[...] > 0.5
 
     row_i = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
     col_i = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
@@ -325,26 +327,70 @@ def _sw_body(
     )
     out = jax.lax.fori_loop(0, n - 1, phase, carry0)
     best_cut, best_cloud = out[6], out[7]
-    cut_ref[0, 0] = best_cut
-    mask_ref[...] = 1.0 - best_cloud
+    return jnp.reshape(best_cut, (1, 1)), 1.0 - best_cloud
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _sw_call(adj, wl, wc, pin, *, interpret: bool):
+def _sw_block_body(
+    adj_ref,   # (g, n, n) f32 — a block of g graphs
+    wl_ref,    # (g, n) f32
+    wc_ref,    # (g, n) f32
+    pin_ref,   # (g, n) f32    1.0 = unoffloadable (pinned to local tier)
+    cut_ref,   # (g, 1) f32    out: min over phases of Eq. 10
+    mask_ref,  # (g, n) f32    out: 1.0 = execute locally
+    *,
+    n: int,
+    g: int,
+):
+    """Solve the g graphs of this grid step back-to-back in VMEM.
+
+    ``g == 1`` reproduces the historical one-graph-per-program grid
+    bit-for-bit; ``g > 1`` amortizes per-invocation overhead (grid
+    bookkeeping, output DMA turnaround) across g solves — the batch-grid
+    tuning knob for small-bucket fleets where dispatch dominates.
+    """
+    adj_blk = adj_ref[...]
+    wl_blk = wl_ref[...]
+    wc_blk = wc_ref[...]
+    pin_blk = pin_ref[...] > 0.5
+
+    def solve_j(j, acc):
+        cuts, masks = acc
+        cut, mask = _solve_graph(
+            jax.lax.dynamic_index_in_dim(adj_blk, j, 0, keepdims=False),
+            jax.lax.dynamic_slice_in_dim(wl_blk, j, 1, 0),
+            jax.lax.dynamic_slice_in_dim(wc_blk, j, 1, 0),
+            jax.lax.dynamic_slice_in_dim(pin_blk, j, 1, 0),
+            n=n,
+        )
+        cuts = jax.lax.dynamic_update_slice_in_dim(cuts, cut, j, 0)
+        masks = jax.lax.dynamic_update_slice_in_dim(masks, mask, j, 0)
+        return cuts, masks
+
+    cuts0 = jnp.zeros((g, 1), jnp.float32)
+    masks0 = jnp.zeros((g, n), jnp.float32)
+    cuts, masks = jax.lax.fori_loop(0, g, solve_j, (cuts0, masks0))
+    cut_ref[...] = cuts
+    mask_ref[...] = masks
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_graphs"))
+def _sw_call(adj, wl, wc, pin, *, interpret: bool, block_graphs: int = 1):
     b, n, _ = adj.shape
-    body = functools.partial(_sw_body, n=n)
+    g = block_graphs
+    assert b % g == 0, (b, g)
+    body = functools.partial(_sw_block_body, n=n, g=g)
     cut, mask = pl.pallas_call(
         body,
-        grid=(b,),
+        grid=(b // g,),
         in_specs=[
-            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((g, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((g, n), lambda i: (i, 0)),
+            pl.BlockSpec((g, n), lambda i: (i, 0)),
+            pl.BlockSpec((g, n), lambda i: (i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((g, 1), lambda i: (i, 0)),
+            pl.BlockSpec((g, n), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, 1), jnp.float32),
@@ -355,6 +401,37 @@ def _sw_call(adj, wl, wc, pin, *, interpret: bool):
     return cut[:, 0], mask > 0.5
 
 
+def default_block_graphs(n: int, interpret: bool) -> int:
+    """Graphs per program invocation for an n-vertex bucket.
+
+    Compiled kernels amortize per-invocation overhead by solving several
+    graphs per grid step: target ~2048 "vertex rows" of work per program,
+    capped at 8 graphs and by the VMEM budget (the input block plus the
+    ~5 n²-sized working arrays must fit).  The interpreter executes the
+    grid serially with no per-step launch cost, so it keeps the
+    historical 1-graph grid.  ``REPRO_MCOP_BLOCK_GRAPHS`` overrides both
+    (the hillclimbing knob for real-TPU tuning).
+    """
+    import os
+
+    override = os.environ.get("REPRO_MCOP_BLOCK_GRAPHS")
+    if override is not None:
+        g = int(override)
+        if g < 1:
+            raise ValueError(f"REPRO_MCOP_BLOCK_GRAPHS must be >= 1, got {g}")
+        return g
+    if interpret:
+        return 1
+    g = max(1, min(8, 2048 // max(n, 1)))
+    while g > 1 and (g + 5) * n * n * 4 > _VMEM_BYTES:
+        g //= 2
+    return g
+
+
+def _pad_batch(b: int, g: int) -> int:
+    return (-b) % g
+
+
 def mcop_stoer_wagner_kernel(
     adj: jnp.ndarray,       # (B, n, n) f32 — a batch of WCG adjacencies
     w_local: jnp.ndarray,   # (B, n)
@@ -362,28 +439,255 @@ def mcop_stoer_wagner_kernel(
     pinned: jnp.ndarray,    # (B, n) bool/f32 — True = unoffloadable
     *,
     interpret: bool | None = None,
+    block_graphs: int | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Solve a batch of MCOP instances entirely on-device.
 
-    One grid step per graph; within a step the adjacency lives in VMEM for
-    the whole |V|−1-phase run (single HBM load per solve).  Returns
-    ``(min_cuts (B,), local_masks (B, n) bool)`` — semantics match
+    ``block_graphs`` graphs per grid step (``None`` = auto, see
+    :func:`default_block_graphs`); within a step each adjacency lives in
+    VMEM for its whole |V|−1-phase run (single HBM load per solve).
+    Batches that don't divide the block are zero-padded with pinned
+    dummy graphs and cropped after.  Returns ``(min_cuts (B,),
+    local_masks (B, n) bool)`` — semantics match
     :func:`repro.core.mcop.mcop_reference` (same heuristic, same
-    tie-breaking, f32 arithmetic).  Dead/padded vertices must be encoded
-    as pinned with zero weights and zero incident edges.
+    tie-breaking, f32 arithmetic), independent of ``block_graphs``.
+    Dead/padded vertices must be encoded as pinned with zero weights and
+    zero incident edges.
     """
     adj = jnp.asarray(adj, jnp.float32)
     assert adj.ndim == 3, f"expected (B, n, n) batch, got {adj.shape}"
-    n = adj.shape[-1]
-    # The body keeps ~5 n²-sized arrays live (adj, eye, members/labels,
-    # two iota matrices) besides the input block — budget all of them.
-    assert 5 * n * n * 4 <= _VMEM_BYTES, (
-        f"graph too large for single-core VMEM with kernel working set: n={n}"
+    b, n = adj.shape[0], adj.shape[-1]
+    interp = _resolve_interpret(interpret)
+    g = default_block_graphs(n, interp) if block_graphs is None else int(block_graphs)
+    g = max(1, min(g, b if b else 1))
+    # The body keeps the g-graph input block plus ~5 n²-sized working
+    # arrays live (adj, eye, members, two iota matrices) — budget both.
+    assert (g + 4) * n * n * 4 <= _VMEM_BYTES, (
+        f"graph too large for single-core VMEM with kernel working set: "
+        f"n={n}, block_graphs={g}"
     )
-    return _sw_call(
-        adj,
-        jnp.asarray(w_local, jnp.float32).reshape(adj.shape[0], n),
-        jnp.asarray(w_cloud, jnp.float32).reshape(adj.shape[0], n),
-        jnp.asarray(pinned, jnp.float32).reshape(adj.shape[0], n),
-        interpret=_resolve_interpret(interpret),
+    wl = jnp.asarray(w_local, jnp.float32).reshape(b, n)
+    wc = jnp.asarray(w_cloud, jnp.float32).reshape(b, n)
+    pin = jnp.asarray(pinned, jnp.float32).reshape(b, n)
+    pad = _pad_batch(b, g)
+    if pad:
+        adj = jnp.concatenate([adj, jnp.zeros((pad, n, n), jnp.float32)])
+        wl = jnp.concatenate([wl, jnp.zeros((pad, n), jnp.float32)])
+        wc = jnp.concatenate([wc, jnp.zeros((pad, n), jnp.float32)])
+        pin = jnp.concatenate([pin, jnp.ones((pad, n), jnp.float32)])
+    cuts, masks = _sw_call(adj, wl, wc, pin, interpret=interp, block_graphs=g)
+    if pad:
+        cuts, masks = cuts[:b], masks[:b]
+    return cuts, masks
+
+
+# ======================================================================
+# Fused build+solve kernel — WCG weights constructed in VMEM, no HBM
+# round-trip for the (B, n, n) adjacency batch.
+# ======================================================================
+
+# cost-model kinds the in-kernel builder implements (Eqs. 4 / 6 / 8);
+# core.mcop maps CostModel instances onto these.
+FUSED_MODEL_KINDS = ("time", "energy", "weighted")
+
+
+def _kernel_weights(kind, omega, t_loc, d_in, d_out, d_in_t, d_out_t, env_row):
+    """Eqs. 4/6/8 on VMEM-resident profile tensors, transpose-free.
+
+    ``env_row`` is (1, 6): [bandwidth_up, bandwidth_down, speedup,
+    p_compute, p_idle, p_transfer].  Mirrors
+    ``repro.core.cost_models.CostModel.batch_weights`` in f32, except the
+    symmetrisation uses pre-transposed copies of the data matrices
+    (``d_in_t``/``d_out_t``) instead of ``swapaxes`` — plain VPU adds, no
+    in-kernel transpose.  Returns ``(wl (1, n), wc (1, n), adj (n, n))``.
+    """
+    b_up = env_row[0, 0]
+    b_down = env_row[0, 1]
+    speedup = env_row[0, 2]
+    p_c = env_row[0, 3]
+    p_i = env_row[0, 4]
+    p_tr = env_row[0, 5]
+
+    # Eq. 1, symmetrised: per_dir + per_dirᵀ via the transposed copies.
+    # Two-term association matches _edge_time_batch exactly (per-element
+    # float sums are order-sensitive; transposing a division result is
+    # bitwise the division of the transposed operand).
+    per_dir = d_in / b_up + d_out / b_down
+    per_dir_t = d_in_t / b_up + d_out_t / b_down
+    adj_t = per_dir + per_dir_t
+    wl_t = t_loc                      # (1, n)
+    wc_t = t_loc / speedup
+    if kind == "time":
+        return wl_t, wc_t, adj_t
+    wl_e = p_c * t_loc
+    wc_e = p_i * wc_t
+    adj_e = p_tr * adj_t
+    if kind == "energy":
+        return wl_e, wc_e, adj_e
+    # Eq. 8: ω·T/T_local + (1−ω)·E/E_local, normalised per graph.
+    t_norm = jnp.maximum(jnp.sum(wl_t), 1e-30)
+    e_norm = jnp.maximum(jnp.sum(wl_e), 1e-30)
+    w = jnp.float32(omega)
+    return (
+        w * wl_t / t_norm + (1 - w) * wl_e / e_norm,
+        w * wc_t / t_norm + (1 - w) * wc_e / e_norm,
+        w * adj_t / t_norm + (1 - w) * adj_e / e_norm,
     )
+
+
+def _fused_block_body(
+    tl_ref,     # (1, n) f32 — profile t_local, replicated across the grid
+    din_ref,    # (n, n) f32 — profile data_in
+    dout_ref,   # (n, n) f32 — profile data_out
+    dint_ref,   # (n, n) f32 — data_inᵀ (host-pre-transposed)
+    doutt_ref,  # (n, n) f32 — data_outᵀ
+    pin_ref,    # (1, n) f32 — profile pinned mask (anchor included)
+    env_ref,    # (g, 6) f32 — this block's environments
+    cut_ref,    # (g, 1) f32 out
+    mask_ref,   # (g, n) f32 out
+    *,
+    n: int,
+    g: int,
+    kind: str,
+    omega: float,
+):
+    """Build each environment's WCG weights in VMEM, then solve it.
+
+    The profile tensors are loaded once per program invocation and reused
+    for all g graphs; only the (g, 6) environment rows vary — the
+    adjacency batch never exists in HBM at all.
+    """
+    t_loc = tl_ref[...]
+    d_in = din_ref[...]
+    d_out = dout_ref[...]
+    d_in_t = dint_ref[...]
+    d_out_t = doutt_ref[...]
+    pin = pin_ref[...] > 0.5
+    env = env_ref[...]
+
+    def solve_j(j, acc):
+        cuts, masks = acc
+        wl, wc, adj = _kernel_weights(
+            kind,
+            omega,
+            t_loc,
+            d_in,
+            d_out,
+            d_in_t,
+            d_out_t,
+            jax.lax.dynamic_slice_in_dim(env, j, 1, 0),
+        )
+        cut, mask = _solve_graph(adj, wl, wc, pin, n=n)
+        cuts = jax.lax.dynamic_update_slice_in_dim(cuts, cut, j, 0)
+        masks = jax.lax.dynamic_update_slice_in_dim(masks, mask, j, 0)
+        return cuts, masks
+
+    cuts0 = jnp.zeros((g, 1), jnp.float32)
+    masks0 = jnp.zeros((g, n), jnp.float32)
+    cuts, masks = jax.lax.fori_loop(0, g, solve_j, (cuts0, masks0))
+    cut_ref[...] = cuts
+    mask_ref[...] = masks
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "omega", "interpret", "block_graphs")
+)
+def _fused_call(
+    t_local, data_in, data_out, pinned, env, *, kind, omega, interpret, block_graphs
+):
+    k = env.shape[0]
+    n = t_local.shape[-1]
+    g = block_graphs
+    assert k % g == 0, (k, g)
+    body = functools.partial(
+        _fused_block_body, n=n, g=g, kind=kind, omega=omega
+    )
+    rep2 = pl.BlockSpec((n, n), lambda i: (0, 0))
+    cut, mask = pl.pallas_call(
+        body,
+        grid=(k // g,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            rep2,
+            rep2,
+            rep2,
+            rep2,
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((g, 6), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((g, 1), lambda i: (i, 0)),
+            pl.BlockSpec((g, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        t_local.reshape(1, n),
+        data_in,
+        data_out,
+        data_in.T,
+        data_out.T,
+        pinned.reshape(1, n).astype(jnp.float32),
+        env,
+    )
+    return cut[:, 0], mask > 0.5
+
+
+def mcop_fused_solve_kernel(
+    t_local: jnp.ndarray,   # (n,) f32 — profile local execution times
+    data_in: jnp.ndarray,   # (n, n) f32 — profile transfer-in bytes
+    data_out: jnp.ndarray,  # (n, n) f32 — profile transfer-out bytes
+    pinned: jnp.ndarray,    # (n,) bool/f32 — profile unoffloadable mask
+    env: jnp.ndarray,       # (K, 6) f32 — per-graph environment columns
+    *,
+    kind: str,
+    omega: float = 0.5,
+    interpret: bool | None = None,
+    block_graphs: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """VMEM-resident fused pipeline: env rows → WCG weights → min cut.
+
+    The XLA-fused ``solve_envs`` path materializes the (K, n, n)
+    adjacency batch in HBM between the build and the solve; this kernel
+    builds each graph's weights in VMEM immediately before its phases
+    run, so the only HBM traffic per graph is 6 environment scalars in
+    and (1 + n) result floats out.  ``kind`` is one of
+    ``FUSED_MODEL_KINDS`` (Eq. 4 / Eq. 6 / Eq. 8-with-``omega``).
+    Returns ``(min_cuts (K,), local_masks (K, n) bool)``.
+    """
+    if kind not in FUSED_MODEL_KINDS:
+        raise ValueError(
+            f"unknown fused cost-model kind {kind!r}; expected one of "
+            f"{FUSED_MODEL_KINDS}"
+        )
+    env = jnp.asarray(env, jnp.float32)
+    assert env.ndim == 2 and env.shape[1] == 6, f"env must be (K, 6), got {env.shape}"
+    k = env.shape[0]
+    n = int(t_local.shape[-1])
+    interp = _resolve_interpret(interpret)
+    g = default_block_graphs(n, interp) if block_graphs is None else int(block_graphs)
+    g = max(1, min(g, k if k else 1))
+    # working set: 5 replicated n² profile blocks + ~5 n²-sized solver arrays
+    assert 10 * n * n * 4 <= _VMEM_BYTES, (
+        f"graph too large for single-core VMEM with fused working set: n={n}"
+    )
+    pad = _pad_batch(k, g)
+    if pad:
+        env = jnp.concatenate([env, jnp.ones((pad, 6), jnp.float32)])
+    cuts, masks = _fused_call(
+        jnp.asarray(t_local, jnp.float32),
+        jnp.asarray(data_in, jnp.float32),
+        jnp.asarray(data_out, jnp.float32),
+        jnp.asarray(pinned, jnp.float32),
+        env,
+        kind=kind,
+        omega=float(omega),
+        interpret=interp,
+        block_graphs=g,
+    )
+    if pad:
+        cuts, masks = cuts[:k], masks[:k]
+    return cuts, masks

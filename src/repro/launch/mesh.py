@@ -8,18 +8,29 @@ import; everything else sees the real device count).
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_local_mesh", "POD_CHIPS"]
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "make_solver_mesh",
+    "use_mesh",
+    "POD_CHIPS",
+]
 
 POD_CHIPS = 256  # one v5e pod = 16×16
 
 
 def _mk(shape, axes) -> Mesh:
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    # axis_types landed after jax 0.4.x; fall back to the plain signature
+    # so the mesh builders work across the jax versions the repo supports.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -36,3 +47,32 @@ def make_local_mesh(*, data: int | None = None, model: int = 1) -> Mesh:
         data = n // model
     assert data * model == n, (data, model, n)
     return _mk((data, model), ("data", "model"))
+
+
+def use_mesh(mesh: Mesh):
+    """Context manager activating ``mesh`` for sharded jit compilation.
+
+    ``jax.set_mesh`` where it exists; on the older jax line the ``Mesh``
+    object is itself the equivalent context manager (it installs the
+    axis-resource environment ``in_shardings``/``out_shardings`` compile
+    against).
+    """
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh
+
+
+def make_solver_mesh(devices=None) -> Mesh:
+    """1-D mesh over the solver fleet's devices, axis name ``"solve"``.
+
+    The MCOP shard dispatcher (``repro.core.mcop_shard``) splits a tick's
+    solve batch along this axis: one shard of graphs per device, gathered
+    back bit-identically.  ``devices=None`` takes every device the
+    process sees (``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    simulates an N-device fleet on CPU hosts).
+    """
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if not devs:
+        raise ValueError("cannot build a solver mesh over zero devices")
+    return Mesh(np.array(devs), ("solve",))

@@ -31,6 +31,7 @@ re-enters the auto-sharding world for the other axes via
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Any, Callable
 
 import jax
@@ -87,12 +88,20 @@ def pipeline_apply(
     data_axes = tuple(a for a in ("data",) if a in other_axes)
     x_spec = P(data_axes if data_axes else None)
 
+    # the replication-check escape hatch was renamed check_rep→check_vma
+    # across jax versions; pass whichever this jax accepts
+    check_kw = (
+        "check_vma"
+        if "check_vma" in inspect.signature(shard_map).parameters
+        else "check_rep"
+    )
+
     @functools.partial(
         shard_map,
         mesh=mesh,
         in_specs=(pipeline_spec_for(params_stacked), x_spec),
         out_specs=x_spec,
-        check_vma=False,
+        **{check_kw: False},
     )
     def run(stage_params, x_local):
         p_local = jax.tree_util.tree_map(lambda a: a[0], stage_params)

@@ -45,6 +45,10 @@ __all__ = [
     "param_shardings",
     "input_shardings",
     "shard_params",
+    "SOLVE_AXIS",
+    "solver_axis",
+    "solver_shards",
+    "solve_batch_spec",
 ]
 
 
@@ -56,6 +60,41 @@ def batch_axes(mesh: Mesh) -> tuple[str, ...]:
 
 def logical_batch_spec(mesh: Mesh) -> P:
     return P(batch_axes(mesh))
+
+
+# ----------------------------------------------------------------------
+# Solver-fleet axis plumbing (the MCOP shard dispatcher's mesh contract)
+# ----------------------------------------------------------------------
+
+# canonical axis name of a dedicated solver mesh (launch.mesh.make_solver_mesh)
+SOLVE_AXIS = "solve"
+
+
+def solver_axis(mesh: Mesh) -> str:
+    """The mesh axis a solve batch shards over.
+
+    A dedicated solver mesh carries the ``"solve"`` axis; on a shared
+    production mesh the solver fleet rides the data-parallel axis (the
+    model axis stays free for tensor-parallel serving).  Falls back to
+    the first axis so any 1-D mesh works unmodified.
+    """
+    names = mesh.axis_names
+    if SOLVE_AXIS in names:
+        return SOLVE_AXIS
+    if "data" in names:
+        return "data"
+    return names[0]
+
+
+def solver_shards(mesh: Mesh) -> int:
+    """Device count along the solver axis (the fleet's shard count)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(sizes[solver_axis(mesh)])
+
+
+def solve_batch_spec(mesh: Mesh) -> P:
+    """PartitionSpec sharding a solve batch's leading axis over the fleet."""
+    return P(solver_axis(mesh))
 
 
 # ----------------------------------------------------------------------

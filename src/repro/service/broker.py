@@ -498,11 +498,21 @@ class OffloadBroker:
         fault_injector: FaultInjector | None = None,
         tracer: Tracer | None = None,
         metrics: MetricsRegistry | None = None,
+        mesh=None,
     ):
         if backend not in ("reference", "jax", "pallas"):
             raise ValueError(f"unknown MCOP batch backend: {backend!r}")
         self.backend = backend
         self.buckets = tuple(buckets)
+        # Solver-fleet routing (repro.core.mcop_shard): resolved ONCE at
+        # construction so every flush this broker dispatches — bucket
+        # solves and batch-group ticks alike — sees the same fleet.
+        # None = auto (shard when >1 device), False = force single-device,
+        # Mesh = shard over exactly that fleet.
+        from repro.core.mcop_shard import resolve_mesh, solver_shards
+
+        self.mesh = resolve_mesh(mesh)
+        self._devices = 1 if self.mesh is None else solver_shards(self.mesh)
         self.clock = clock
         self.resilience = resilience
         self.fault_injector = fault_injector
@@ -1264,9 +1274,14 @@ class OffloadBroker:
         """
         if ctx is None:
             with self._timer(
-                "mcop_dispatch_duration_s", backend=self.backend, bucket=m
+                "mcop_dispatch_duration_s",
+                backend=self.backend, bucket=m, devices=self._devices,
             ):
-                return mcop_batch(wb, backend=self.backend, buckets=(m,))
+                return mcop_batch(
+                    wb, backend=self.backend, buckets=(m,),
+                    mesh=self.mesh if self.mesh is not None else False,
+                    tracer=self.tracer,
+                )
         policy = ctx.policy
         breaker = policy.breaker if policy is not None else None
         for attempt in range(ctx.attempts):
@@ -1310,9 +1325,14 @@ class OffloadBroker:
                             use = poison_batch(wb)
                 use.validate_finite()
                 with self._timer(
-                    "mcop_dispatch_duration_s", backend=backend, bucket=m
+                    "mcop_dispatch_duration_s",
+                    backend=backend, bucket=m, devices=self._devices,
                 ):
-                    out = mcop_batch(use, backend=backend, buckets=(m,))
+                    out = mcop_batch(
+                        use, backend=backend, buckets=(m,),
+                        mesh=self.mesh if self.mesh is not None else False,
+                        tracer=self.tracer,
+                    )
                 if not all(math.isfinite(res.min_cut) for res in out):
                     raise RuntimeError(
                         "non-finite min_cut from solver dispatch"
@@ -1479,6 +1499,7 @@ class OffloadBroker:
                 bucket=m,
                 batch=len(idxs),
                 backend=self.backend,
+                devices=self._devices,
             ):
                 batch = self._dispatch(
                     WCGBatch.from_wcgs([solves[i].g for i in idxs], m=m),

@@ -246,6 +246,7 @@ class BatchSessionGroup:
             sleep=self.broker._backoff_sleep,
             tracer=self.broker.tracer,
             metrics=self.broker.metrics,
+            mesh=self.broker.mesh if self.broker.mesh is not None else False,
         )
         self._staged = None
         self._reports.append(report)

@@ -427,11 +427,11 @@ def test_breaker_escalates_failing_backend_mid_tick(monkeypatch):
 
     real = broker_mod.mcop_batch
 
-    def flaky(batch, *, backend, buckets):
+    def flaky(batch, *, backend, buckets, **kw):
         backends_used.append(backend)
         if backend == "jax":
             raise RuntimeError("device lost")
-        return real(batch, backend=backend, buckets=buckets)
+        return real(batch, backend=backend, buckets=buckets, **kw)
 
     monkeypatch.setattr(broker_mod, "mcop_batch", flaky)
     fut = broker.submit("app", _env())

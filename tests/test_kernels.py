@@ -219,3 +219,132 @@ def test_default_interpret_env_override(monkeypatch):
         assert ops.default_interpret() is (not ops.on_tpu())
     finally:
         ops.default_interpret.cache_clear()
+
+
+# ----------------------------------------------------------------------
+# Compiled (non-interpret) tier + blocked grid + fused build+solve
+# ----------------------------------------------------------------------
+
+
+def _sw_batch(b=10, n=9, seed=42):
+    rng = np.random.default_rng(seed)
+    graphs = [random_wcg(n, rng=rng) for _ in range(b)]
+    adj = np.stack([g.adj for g in graphs]).astype(np.float32)
+    wl = np.stack([g.w_local for g in graphs]).astype(np.float32)
+    wc = np.stack([g.w_cloud for g in graphs]).astype(np.float32)
+    pin = np.stack([~g.offloadable for g in graphs])
+    return graphs, adj, wl, wc, pin
+
+
+def test_mcop_kernel_compiled_noninterpret_path(monkeypatch):
+    """REPRO_PALLAS_INTERPRET=0 routes the batch kernel through the real
+    Pallas compile pipeline.  Platforms whose backend cannot lower the
+    kernel (CPU: "Only interpret mode is supported") skip with that
+    reason — on TPU this test runs the compiled tier for real and pins
+    it to the interpret tier bitwise."""
+    from repro.kernels import ops
+    from repro.kernels.mcop_phase import mcop_stoer_wagner_kernel
+
+    _, adj, wl, wc, pin = _sw_batch()
+    cuts_i, masks_i = mcop_stoer_wagner_kernel(adj, wl, wc, pin, interpret=True)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    ops.default_interpret.cache_clear()
+    try:
+        assert ops.default_interpret() is False
+        try:
+            cuts_c, masks_c = mcop_stoer_wagner_kernel(adj, wl, wc, pin)
+            cuts_c = np.asarray(cuts_c)
+        except Exception as e:  # noqa: BLE001 — platform refusal, not a bug
+            pytest.skip(f"compiled Pallas unavailable on this platform: {e}")
+        assert np.array_equal(cuts_c, np.asarray(cuts_i))
+        assert np.array_equal(np.asarray(masks_c), np.asarray(masks_i))
+    finally:
+        ops.default_interpret.cache_clear()
+
+
+def test_mcop_kernel_block_graphs_bitwise_invariant():
+    """The blocked grid (g graphs per program instance) is a pure
+    scheduling choice: g=1, g=3 (forces tail padding on b=10) and the
+    auto choice must produce bit-identical cuts and masks, all matching
+    the numpy oracle."""
+    from repro.kernels.mcop_phase import (
+        default_block_graphs,
+        mcop_stoer_wagner_kernel,
+    )
+
+    graphs, adj, wl, wc, pin = _sw_batch()
+    runs = {}
+    for g in (1, 3, None):
+        cuts, masks = mcop_stoer_wagner_kernel(
+            adj, wl, wc, pin, interpret=True, block_graphs=g
+        )
+        runs[g] = (np.asarray(cuts), np.asarray(masks))
+    base_cuts, base_masks = runs[1]
+    for g in (3, None):
+        assert np.array_equal(runs[g][0], base_cuts), g
+        assert np.array_equal(runs[g][1], base_masks), g
+    for i, wcg in enumerate(graphs):
+        assert base_cuts[i] == pytest.approx(
+            mcop_reference(wcg).min_cut, rel=1e-5
+        )
+    assert default_block_graphs(16, True) == 1  # interpret stays g=1
+
+
+def test_mcop_kernel_block_graphs_env_override(monkeypatch):
+    from repro.kernels.mcop_phase import default_block_graphs
+
+    monkeypatch.setenv("REPRO_MCOP_BLOCK_GRAPHS", "4")
+    assert default_block_graphs(16, True) == 4
+    monkeypatch.setenv("REPRO_MCOP_BLOCK_GRAPHS", "0")
+    with pytest.raises(ValueError):
+        default_block_graphs(16, True)
+
+
+def test_fused_kernel_solve_envs_parity():
+    """backend="pallas_fused" (in-kernel WCG weight build) must agree
+    with the host-build "jax" path: identical masks, cut values equal to
+    f32 reassociation tolerance, across all three cost-model kinds."""
+    from repro.core import (
+        AppProfile,
+        EnergyModel,
+        ResponseTimeModel,
+        WeightedModel,
+        linear_graph,
+    )
+    from repro.core.cost_models import EnvArrays
+    from repro.core.mcop import solve_envs
+
+    rng = np.random.default_rng(6)
+    profile = AppProfile.from_wcg_times(linear_graph(9, rng=rng))
+    envs = EnvArrays(*(rng.uniform(0.5, 5.0, 7) for _ in range(6)))
+    for model in (ResponseTimeModel(), EnergyModel(), WeightedModel(0.35)):
+        fused = solve_envs(profile, model, envs, backend="pallas_fused")
+        plain = solve_envs(profile, model, envs, backend="jax")
+        for rf, rp in zip(fused, plain):
+            assert np.array_equal(rf.local_mask, rp.local_mask), model
+            assert rf.min_cut == pytest.approx(rp.min_cut, rel=1e-6), model
+
+
+def test_fused_kernel_rejects_unknown_model_kind():
+    from repro.core import AppProfile, linear_graph
+    from repro.core.cost_models import CostModel, EnvArrays
+    from repro.core.mcop import solve_envs
+
+    class Exotic(CostModel):
+        name = "exotic"
+
+        @property
+        def fingerprint(self):
+            return ("exotic",)
+
+        def weights(self, graph, env):  # pragma: no cover - never called
+            raise NotImplementedError
+
+        def batch_weights(self, t_local, data_in, data_out, env):
+            raise NotImplementedError  # pragma: no cover
+
+    rng = np.random.default_rng(6)
+    profile = AppProfile.from_wcg_times(linear_graph(6, rng=rng))
+    envs = EnvArrays(*(rng.uniform(0.5, 5.0, 3) for _ in range(6)))
+    with pytest.raises(ValueError, match="exotic"):
+        solve_envs(profile, Exotic(), envs, backend="pallas_fused")

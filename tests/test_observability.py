@@ -481,7 +481,8 @@ def test_telemetry_fields_mirror_registry_counters():
         c for c in snap["counters"] if c["name"] == "solve_envs_dispatches"
     ]
     assert tel.dispatches == 0 or dispatch_rows == [] or all(
-        set(c["labels"]) == {"backend", "bucket"} for c in dispatch_rows
+        set(c["labels"]) == {"backend", "bucket", "devices"}
+        for c in dispatch_rows
     )
     # queue gauges were published
     assert metrics.get_gauge("broker_queue_depth") is not None

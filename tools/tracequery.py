@@ -81,19 +81,32 @@ def slowest_ticks(spans: list[dict], n: int) -> list[dict]:
 
 
 def stage_breakdown(spans: list[dict]) -> list[dict]:
-    agg: dict[str, list[float]] = {}
+    """Per-stage rows, split by solver-fleet placement when present.
+
+    Spans from the sharded solve plane carry ``devices`` (fleet size)
+    and — for the per-device ``*.shard`` completion spans — ``shard``
+    attrs; grouping on them turns ``--stages`` into a per-device solve
+    time view instead of averaging the whole fleet into one row.
+    """
+    agg: dict[tuple, list[float]] = {}
     for s in spans:
-        agg.setdefault(s["name"], []).append(float(s.get("dur", 0.0)))
-    rows = [
-        {
+        attrs = s.get("attrs", {})
+        key = (s["name"], attrs.get("devices"), attrs.get("shard"))
+        agg.setdefault(key, []).append(float(s.get("dur", 0.0)))
+    rows = []
+    for (name, devices, shard), durs in agg.items():
+        row = {
             "name": name,
             "count": len(durs),
             "total_s": sum(durs),
             "mean_s": sum(durs) / len(durs),
             "max_s": max(durs),
         }
-        for name, durs in agg.items()
-    ]
+        if devices is not None:
+            row["devices"] = devices
+        if shard is not None:
+            row["shard"] = shard
+        rows.append(row)
     rows.sort(key=lambda r: -r["total_s"])
     return rows
 
@@ -185,8 +198,13 @@ def main(argv: list[str] | None = None) -> int:
         if "stages" in doc:
             print("per-stage breakdown:")
             for r in doc["stages"]:
+                label = r["name"]
+                if "devices" in r:
+                    label += f"[devices={r['devices']}]"
+                if "shard" in r:
+                    label += f"[shard={r['shard']}]"
                 print(
-                    f"  {r['name']:<22} n={r['count']:<5}"
+                    f"  {label:<22} n={r['count']:<5}"
                     f" total={_fmt_s(r['total_s'])}"
                     f" mean={_fmt_s(r['mean_s'])}"
                     f" max={_fmt_s(r['max_s'])}"
