@@ -16,6 +16,10 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
     faults          → fault-tolerance overhead: throughput/p99/degraded
                       fraction at injected fault rates {0%, 1%, 10%}
                       (``REPRO_FAULTS_STEPS=3`` for the CI smoke subset)
+    ipc             → cross-process serving plane: req/s and p99 over a
+                      unix-socket solver subprocess vs the in-process
+                      broker (``REPRO_IPC_REQS=16`` for the CI smoke
+                      subset)
     shard           → sharded solver fleet: µs/graph and tick throughput
                       at 1/2/4/8 simulated devices, plus compiled-vs-
                       interpret kernel rows (``REPRO_SHARD_K=64`` for the
@@ -24,11 +28,12 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
 
 The mcop_backends rows are additionally appended to ``BENCH_mcop.json``,
 the broker rows to ``BENCH_broker.json``, the pipeline rows to
-``BENCH_pipeline.json``, the scale rows to ``BENCH_scale.json`` and the
-faults rows to ``BENCH_faults.json`` (bounded trajectories of runs), so
-backend/batching/serving/resilience numbers can be tracked across
-commits; the broker, pipeline, scale and faults artifacts are
-smoke-checked after every append.
+``BENCH_pipeline.json``, the scale rows to ``BENCH_scale.json``, the
+faults rows to ``BENCH_faults.json`` and the ipc rows to
+``BENCH_ipc.json`` (bounded trajectories of runs), so
+backend/batching/serving/resilience/transport numbers can be tracked
+across commits; the broker, pipeline, scale, faults, shard and ipc
+artifacts are smoke-checked after every append.
 """
 
 from __future__ import annotations
@@ -49,6 +54,7 @@ from benchmarks import (
     compression_ablation,
     faults,
     gains,
+    ipc,
     mcop_backends,
     optimality_gap,
     pipeline,
@@ -67,6 +73,7 @@ MODULES = {
     "scale": scale,
     "faults": faults,
     "shard": shard,
+    "ipc": ipc,
     "compression_ablation": compression_ablation,
     "roofline": roofline,
 }
@@ -81,6 +88,7 @@ _PIPELINE_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_pipeline.json"
 _SCALE_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_scale.json"
 _FAULTS_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_faults.json"
 _SHARD_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_shard.json"
+_IPC_TRAJECTORY_PATH = _REPO_ROOT / "BENCH_ipc.json"
 _TRAJECTORY_KEEP = 50  # bounded history of runs
 
 
@@ -264,6 +272,35 @@ def _smoke_check_trajectory(path: pathlib.Path, benchmark: str) -> None:
             raise RuntimeError(
                 f"{path.name}: last run lacks the shard/kernel_compiled row"
             )
+    if benchmark == "ipc":
+        # ISSUE-10 acceptance: both passes present, and cross-process
+        # throughput within 3x of in-process at the K=64 bucket (the
+        # gate is re-checked from the artifact so a stale row can't
+        # quietly pass CI)
+        by_name = {row["name"]: row for row in last["rows"]}
+        cross = next(
+            (r for n, r in by_name.items() if n.startswith("ipc/cross_process_k")),
+            None,
+        )
+        local = next(
+            (r for n, r in by_name.items() if n.startswith("ipc/in_process_k")),
+            None,
+        )
+        if cross is None or local is None:
+            raise RuntimeError(
+                f"{path.name}: last run lacks the ipc in/cross pass rows"
+            )
+        m = re.search(r"slowdown_vs_local=(\d+(?:\.\d+)?)x", cross["derived"])
+        if m is None:
+            raise RuntimeError(
+                f"{path.name}: cross-process row lacks slowdown_vs_local=: "
+                f"{cross!r}"
+            )
+        if cross["name"].endswith("_k64") and float(m.group(1)) > 3.0:
+            raise RuntimeError(
+                f"{path.name}: cross-process throughput fell past 3x of "
+                f"in-process at K=64 ({m.group(1)}x)"
+            )
 
 
 def main(argv=None) -> int:
@@ -314,6 +351,12 @@ def main(argv=None) -> int:
                 )
                 _smoke_check_trajectory(_SHARD_TRAJECTORY_PATH, "shard")
                 print("shard/smoke,0.00,BENCH_shard.json ok", flush=True)
+            elif name == "ipc":
+                _append_trajectory(
+                    rows, _IPC_TRAJECTORY_PATH, "ipc", wall_s=wall_s
+                )
+                _smoke_check_trajectory(_IPC_TRAJECTORY_PATH, "ipc")
+                print("ipc/smoke,0.00,BENCH_ipc.json ok", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}/ERROR,0.00,{e!r}", flush=True)

@@ -364,15 +364,25 @@ class PlacementCache:
             m[3].set(0)
 
     # -- persistence -----------------------------------------------------
-    def snapshot(self, *, fingerprint: str | None = None) -> dict:
+    def snapshot(
+        self,
+        *,
+        fingerprint: str | None = None,
+        meta: dict | None = None,
+    ) -> dict:
         """JSON-serializable snapshot of the entries (oldest → newest).
 
         ``fingerprint`` should be :func:`profile_fingerprint` of the
         profile the masks were computed for; :meth:`load` uses it to
         refuse snapshots taken for a different application.  Counters are
         deliberately not persisted — a warm restart starts fresh stats.
+
+        ``meta`` is an opaque JSON-serializable dict stored alongside the
+        entries and returned by :meth:`load_with_meta` — the serving
+        plane stamps it with the journal sequence / broker tick the
+        snapshot covers so a warm restart knows where replay begins.
         """
-        return {
+        doc = {
             "version": SNAPSHOT_VERSION,
             "fingerprint": fingerprint,
             "rel_step": self.quantizer.rel_step,
@@ -381,8 +391,17 @@ class PlacementCache:
                 for k, v in self._entries.items()
             ],
         }
+        if meta is not None:
+            doc["meta"] = dict(meta)
+        return doc
 
-    def save(self, path, *, fingerprint: str | None = None) -> None:
+    def save(
+        self,
+        path,
+        *,
+        fingerprint: str | None = None,
+        meta: dict | None = None,
+    ) -> None:
         """Atomically write the snapshot to ``path``.
 
         The document is serialized to a temporary file in the same
@@ -391,7 +410,10 @@ class PlacementCache:
         :meth:`load`'s guards then only ever see whole files.
         """
         path = pathlib.Path(path)
-        payload = json.dumps(self.snapshot(fingerprint=fingerprint)) + "\n"
+        payload = (
+            json.dumps(self.snapshot(fingerprint=fingerprint, meta=meta))
+            + "\n"
+        )
         fd, tmp = tempfile.mkstemp(
             dir=path.parent or ".", prefix=f".{path.name}.", suffix=".tmp"
         )
@@ -425,26 +447,44 @@ class PlacementCache:
         newest (last-written) entries.  Returns the number of entries
         loaded.
         """
+        loaded, _ = self.load_with_meta(
+            source, fingerprint=fingerprint, expected_n=expected_n
+        )
+        return loaded
+
+    def load_with_meta(
+        self,
+        source,
+        *,
+        fingerprint: str | None = None,
+        expected_n: int | None = None,
+    ) -> tuple[int, dict | None]:
+        """:meth:`load`, also returning the snapshot's ``meta`` dict.
+
+        ``meta`` is ``None`` whenever the snapshot was rejected (any of
+        the cold-start guards fired) or carried no metadata — the caller
+        can distinguish "warm with provenance" from "cold" in one call.
+        """
         if isinstance(source, (str, pathlib.Path)):
             try:
                 doc = json.loads(pathlib.Path(source).read_text())
             except (OSError, json.JSONDecodeError, UnicodeDecodeError):
-                return 0
+                return 0, None
         else:
             doc = source
         if not isinstance(doc, dict) or doc.get("version") != SNAPSHOT_VERSION:
-            return 0
+            return 0, None
         if fingerprint is not None and doc.get("fingerprint") != fingerprint:
-            return 0
+            return 0, None
         try:
             rel = float(doc.get("rel_step"))
         except (TypeError, ValueError):
-            return 0
+            return 0, None
         if not math.isclose(rel, self.quantizer.rel_step, rel_tol=1e-9):
-            return 0
+            return 0, None
         entries = doc.get("entries")
         if not isinstance(entries, list):
-            return 0
+            return 0, None
         loaded = 0
         for e in entries:
             try:
@@ -458,7 +498,8 @@ class PlacementCache:
                 continue
             self.store(key, mask)
             loaded += 1
-        return loaded
+        meta = doc.get("meta")
+        return loaded, (dict(meta) if isinstance(meta, dict) else None)
 
     @classmethod
     def from_snapshot(

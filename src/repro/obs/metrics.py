@@ -441,6 +441,54 @@ class MetricsRegistry:
                 )
             mine.merge(h)
 
+    @classmethod
+    def from_snapshot(cls, doc: dict, *, clock=None) -> "MetricsRegistry":
+        """Rehydrate a registry from :meth:`snapshot`'s wire format.
+
+        The inverse half of the cross-process telemetry path: a
+        :class:`~repro.service.server.SolverServer` ships
+        ``snapshot()`` inside a ``telemetry_report`` frame and the
+        client rebuilds live instruments from it — ready to
+        :meth:`merge` into a fleet-wide registry.  Malformed entries
+        are skipped (telemetry must never crash the consumer);
+        histogram quantiles are re-derived from the bucket counts, not
+        trusted from the document.
+        """
+        reg = cls(enabled=True, **({"clock": clock} if clock else {}))
+        for e in doc.get("counters", ()):
+            try:
+                reg.counter(e["name"], **e.get("labels", {})).inc(
+                    float(e["value"])
+                )
+            except (KeyError, TypeError, ValueError):
+                continue
+        for e in doc.get("gauges", ()):
+            try:
+                reg.gauge(e["name"], **e.get("labels", {})).set(
+                    float(e["value"])
+                )
+            except (KeyError, TypeError, ValueError):
+                continue
+        for e in doc.get("histograms", ()):
+            try:
+                h = reg.histogram(
+                    e["name"],
+                    lo=float(e["lo"]),
+                    growth=float(e["growth"]),
+                    n_buckets=len(e["counts"]),
+                    **e.get("labels", {}),
+                )
+                h.counts = [int(c) for c in e["counts"]]
+                h.underflow = int(e["underflow"])
+                h.overflow = int(e["overflow"])
+                h.count = int(e["count"])
+                h.sum = float(e["sum"])
+                h.min = math.inf if e.get("min") is None else float(e["min"])
+                h.max = -math.inf if e.get("max") is None else float(e["max"])
+            except (KeyError, TypeError, ValueError):
+                continue
+        return reg
+
     # -- introspection ---------------------------------------------------
     def get_counter(self, name: str, **labels) -> Counter | None:
         return self._counters.get((name, _label_key(labels)))

@@ -20,6 +20,15 @@
                 tests, benchmarks and demos, plus the vectorized
                 :class:`TrafficGenerator` (Poisson arrivals, geometric
                 churn) feeding batched session groups.
+``wire``      — length-prefixed JSON/msgpack frame protocol of the
+                cross-process serving plane (versioned hello, typed
+                error frames, bit-exact float64 round trips).
+``server``    — :class:`SolverServer`: the solver process owning the
+                device and the broker, with a write-ahead request
+                journal, background snapshot loop, and journaled warm
+                restart.
+``client``    — :class:`BrokerClient`: sessions over unix/TCP sockets
+                with graceful reconnect and idempotent resubmission.
 """
 
 from repro.service.broker import (
@@ -29,6 +38,7 @@ from repro.service.broker import (
     PlacementFuture,
     TickReport,
 )
+from repro.service.client import BrokerClient, ClientFuture, RemoteBatchGroup
 from repro.service.faults import (
     FAULT_KINDS,
     FAULT_SITES,
@@ -45,7 +55,20 @@ from repro.service.resilience import (
     RetryPolicy,
 )
 from repro.service.scheduler import QueueEntry, WeightedFairScheduler
+from repro.service.server import Journal, SolverServer, tcp_address, unix_address
 from repro.service.session import BatchSessionGroup, BrokerSession
+from repro.service.wire import (
+    PROTOCOL_VERSION,
+    BadFrame,
+    FrameStream,
+    FrameTooLarge,
+    RemoteError,
+    TruncatedFrame,
+    VersionMismatch,
+    WireError,
+    decode_frame,
+    encode_frame,
+)
 from repro.service.workload import (
     DEFAULT_REGIMES,
     Regime,
@@ -79,6 +102,23 @@ __all__ = [
     "WeightedFairScheduler",
     "BrokerSession",
     "BatchSessionGroup",
+    "PROTOCOL_VERSION",
+    "WireError",
+    "BadFrame",
+    "FrameTooLarge",
+    "TruncatedFrame",
+    "VersionMismatch",
+    "RemoteError",
+    "FrameStream",
+    "encode_frame",
+    "decode_frame",
+    "SolverServer",
+    "Journal",
+    "unix_address",
+    "tcp_address",
+    "BrokerClient",
+    "ClientFuture",
+    "RemoteBatchGroup",
     "DEFAULT_REGIMES",
     "Regime",
     "TrafficGenerator",

@@ -639,9 +639,29 @@ class OffloadBroker:
         t = self._tenants[name]
         return t.cache.snapshot(fingerprint=t.fingerprint)
 
-    def save_snapshot(self, name: str, path) -> None:
+    def save_snapshot(self, name: str, path, *, meta: dict | None = None) -> None:
         t = self._tenants[name]
-        t.cache.save(path, fingerprint=t.fingerprint)
+        t.cache.save(path, fingerprint=t.fingerprint, meta=meta)
+
+    def restore_tick(self, tick: int) -> None:
+        """Fast-forward the tick counter to ``tick`` (warm restart).
+
+        Replies stamp the tick they resolved on, so a serving plane
+        replaying a journal tail after a crash must first realign the
+        counter with the persisted history — otherwise the replayed
+        replies would renumber from zero and break bit-identity with
+        the uninterrupted run.  Only ever move forward on an idle
+        broker: rewinding (or skipping while requests are queued) would
+        corrupt armed deadlines and the telemetry timeline.
+        """
+        tick = int(tick)
+        if tick < self._tick:
+            raise ValueError(
+                f"cannot rewind tick counter {self._tick} -> {tick}"
+            )
+        if self._scheduler.pending and tick != self._tick:
+            raise RuntimeError("restore_tick requires an empty queue")
+        self._tick = tick
 
     # -- submission ------------------------------------------------------
     def _enqueue(self, r: _Request) -> PlacementFuture:

@@ -1,0 +1,25 @@
+"""Shared fixtures for the test suite.
+
+``qwen_stages`` is THE canonical framework-level stage list —
+qwen2-7b at the 4k-token training shape, 8-layer groups — previously
+copy-pasted into every elastic/broker/pipeline test.  The specs are
+built once per session (stage_specs is pure but not free) and handed
+out as a fresh shallow list; StageSpec is a frozen dataclass, so tests
+cannot corrupt each other through the shared elements.
+"""
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def _qwen_stages_cached():
+    from repro.configs import ARCHITECTURES, SHAPES
+    from repro.profilers.program import stage_specs
+
+    return stage_specs(ARCHITECTURES["qwen2-7b"], SHAPES["train_4k"], group=8)
+
+
+@pytest.fixture
+def qwen_stages(_qwen_stages_cached):
+    """qwen2-7b / train_4k / group=8 stage specs, fresh list per test."""
+    return list(_qwen_stages_cached)

@@ -277,14 +277,12 @@ def test_broker_deferred_build_failure_requeues_everything():
     assert broker.pending == 2  # both re-queued, neither stranded
 
 
-def test_submit_resize_rides_elastic_lane():
+def test_submit_resize_rides_elastic_lane(qwen_stages):
     from repro.core.placement import TPUV5E_TIER
-    from repro.profilers.program import stage_specs
-    from repro.configs import ARCHITECTURES, SHAPES
     from repro.runtime import ElasticMeshManager
     from repro.service import OffloadBroker
 
-    stages = stage_specs(ARCHITECTURES["qwen2-7b"], SHAPES["train_4k"], group=8)
+    stages = qwen_stages
     mgr = ElasticMeshManager(stages, TPUV5E_TIER, TPUV5E_TIER)
     broker = OffloadBroker(backend="reference", clock=lambda: 0.0)
     broker.register("fleet")

@@ -475,23 +475,17 @@ def test_warm_started_broker_replays_trace_with_zero_dispatches(tmp_path):
 # ----------------------------------------------------------------------
 
 
-def test_elastic_submit_resize_matches_sync_resize():
+def test_elastic_submit_resize_matches_sync_resize(qwen_stages):
     from repro.core.placement import TPUV5E_TIER
     from repro.runtime import ElasticMeshManager
-
-    def stages():
-        from repro.configs import ARCHITECTURES, SHAPES
-        from repro.profilers.program import stage_specs
-
-        return stage_specs(ARCHITECTURES["qwen2-7b"], SHAPES["train_4k"], group=8)
 
     tl = dataclasses.replace(TPUV5E_TIER, name="local", chips=128)
     tr = dataclasses.replace(TPUV5E_TIER, name="remote", chips=128)
 
-    sync = ElasticMeshManager(stages(), tl, tr)
+    sync = ElasticMeshManager(list(qwen_stages), tl, tr)
     ev_sync = sync.resize(step=100, remote_chips=16, reason="failure")
 
-    mgr = ElasticMeshManager(stages(), tl, tr)
+    mgr = ElasticMeshManager(list(qwen_stages), tl, tr)
     broker = _broker()
     broker.register("fleet")   # raw-graph tenant
     pending = mgr.submit_resize(
@@ -530,15 +524,13 @@ def test_elastic_submit_resize_matches_sync_resize():
     p3.resolve()
 
 
-def test_overlapping_pending_resizes_resolve_safely():
+def test_overlapping_pending_resizes_resolve_safely(qwen_stages):
     """Out-of-order resolves must record the tiers each plan was solved
     on and never roll manager.plan back to a stale plan."""
-    from repro.configs import ARCHITECTURES, SHAPES
     from repro.core.placement import TPUV5E_TIER
-    from repro.profilers.program import stage_specs
     from repro.runtime import ElasticMeshManager
 
-    stages = stage_specs(ARCHITECTURES["qwen2-7b"], SHAPES["train_4k"], group=8)
+    stages = qwen_stages
     tl = dataclasses.replace(TPUV5E_TIER, name="local", chips=128)
     tr = dataclasses.replace(TPUV5E_TIER, name="remote", chips=128)
     mgr = ElasticMeshManager(stages, tl, tr)

@@ -1,0 +1,365 @@
+"""Wire-protocol conformance + fuzz suite (`service/wire.py`, server edge).
+
+The contract under test: hostile bytes — truncation at every offset,
+seeded garbage, oversized declared lengths, version-mismatch hellos —
+must surface as *typed* outcomes (`WireError` subclasses locally, typed
+``error`` frames + clean disconnects at the server) and never as a hang
+or a silently-unresolved future.  Every socket read in this file is
+timeout-bounded, so a hang is a test failure, not a CI deadlock.
+"""
+
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import AppProfile, Environment, ResponseTimeModel, random_wcg
+from repro.service import (
+    BrokerClient,
+    OffloadBroker,
+    SolverServer,
+    unix_address,
+)
+from repro.service.wire import (
+    DEFAULT_MAX_FRAME,
+    ERROR_CODES,
+    HEADER_SIZE,
+    PROTOCOL_VERSION,
+    BadFrame,
+    FrameStream,
+    FrameTooLarge,
+    TruncatedFrame,
+    VersionMismatch,
+    WireError,
+    decode_frame,
+    encode_frame,
+    env_to_wire,
+    error_frame,
+    reply_to_wire,
+    supported_encodings,
+    wire_to_env,
+    wire_to_reply,
+)
+from _hyp import given, settings, st  # hypothesis or skip-shim (see _hyp.py)
+
+pytestmark = pytest.mark.service
+
+TIMEOUT = 10.0  # bound on every read: a hang is a failure, not a stall
+
+
+# ----------------------------------------------------------------------
+# codec round trips
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("encoding", supported_encodings())
+def test_frame_round_trip(encoding):
+    frame = {"type": "submit", "id": "c-1", "x": [1, 2.5, None, "s"]}
+    data = encode_frame(frame, encoding=encoding)
+    out, used = decode_frame(data)
+    assert out == frame and used == len(data)
+
+
+@pytest.mark.parametrize("encoding", supported_encodings())
+def test_float64_round_trip_is_bit_exact(encoding):
+    """The determinism contract: every float64 crosses the wire intact —
+    what makes cross-process replies ``==`` in-process ones."""
+    rng = np.random.default_rng(0)
+    values = [
+        float(v)
+        for v in [
+            *rng.standard_normal(64),
+            *np.exp(rng.uniform(-300, 300, 32)),
+            5e-324, 1.7976931348623157e308, 1 / 3, 0.1 + 0.2,
+        ]
+    ]
+    frame = {"type": "t", "v": values}
+    out, _ = decode_frame(encode_frame(frame, encoding=encoding))
+    assert all(
+        struct.pack("<d", a) == struct.pack("<d", b)
+        for a, b in zip(out["v"], values)
+    )
+
+
+def test_env_and_reply_round_trip():
+    from repro.service.broker import BrokerReply
+    from repro.core.mcop import MCOPResult
+
+    env = Environment(
+        bandwidth_up=1 / 3, bandwidth_down=2.25, speedup=np.pi,
+        p_compute=0.7, p_idle=0.01, p_transfer=0.3,
+    )
+    assert wire_to_env(env_to_wire(env)) == env
+    reply = BrokerReply(
+        MCOPResult(min_cut=1 / 7, local_mask=np.array([True, False, True]),
+                   phases=[]),
+        cache_hit=True, coalesced=False, tick=41, degraded=True,
+    )
+    out = wire_to_reply(reply_to_wire(reply))
+    assert out.result.min_cut == reply.result.min_cut
+    assert np.array_equal(out.result.local_mask, reply.result.local_mask)
+    assert (out.cache_hit, out.coalesced, out.tick, out.rejected,
+            out.degraded, out.timed_out) == (True, False, 41, False,
+                                             True, False)
+
+
+# ----------------------------------------------------------------------
+# hostile bytes, locally
+# ----------------------------------------------------------------------
+def test_truncation_at_every_offset():
+    data = encode_frame({"type": "ping", "nonce": "abc"})
+    for cut in range(len(data)):
+        with pytest.raises(TruncatedFrame):
+            decode_frame(data[:cut])
+
+
+def test_oversized_frames_refused_both_ways():
+    with pytest.raises(FrameTooLarge):
+        encode_frame({"type": "t", "blob": "x" * DEFAULT_MAX_FRAME})
+    # a forged header declaring a huge payload is refused from the
+    # header alone — no attempt to buffer the declared bytes
+    forged = struct.pack("!IB", DEFAULT_MAX_FRAME + 1, 0)
+    with pytest.raises(FrameTooLarge):
+        decode_frame(forged)
+
+
+def test_malformed_payloads_are_typed_errors():
+    bad = [
+        struct.pack("!IB", 4, 0) + b"nope",        # undecodable json
+        struct.pack("!IB", 4, 9) + b"\0\0\0\0",    # unknown encoding tag
+        struct.pack("!IB", 2, 0) + b"[]",          # not a dict
+        struct.pack("!IB", 2, 0) + b"{}",          # no "type"
+        struct.pack("!IB", 12, 0) + b'{"type": 42}',  # non-str type
+    ]
+    for data in bad:
+        with pytest.raises(BadFrame):
+            decode_frame(data)
+
+
+def test_garbage_bytes_seeded_fuzz():
+    """256 seeded random byte strings: every one must resolve to a typed
+    WireError or a (frame, consumed) pair — nothing else escapes."""
+    rng = np.random.default_rng(1234)
+    for _ in range(256):
+        blob = rng.bytes(int(rng.integers(0, 96)))
+        try:
+            frame, used = decode_frame(blob)
+        except WireError:
+            continue
+        assert isinstance(frame, dict) and 0 < used <= len(blob)
+
+
+def test_bit_flip_fuzz_on_valid_frames():
+    """Seeded single-byte corruptions of a valid frame: decode either
+    still succeeds (flip landed in a string) or raises a WireError."""
+    data = bytearray(encode_frame({"type": "submit", "id": "x" * 32}))
+    rng = np.random.default_rng(99)
+    for _ in range(256):
+        i = int(rng.integers(len(data)))
+        corrupted = bytearray(data)
+        corrupted[i] ^= int(rng.integers(1, 256))
+        try:
+            decode_frame(bytes(corrupted))
+        except WireError:
+            pass
+
+
+def test_error_frame_codes_are_closed_set():
+    for code in ERROR_CODES:
+        assert error_frame(code, "m")["type"] == "error"
+    with pytest.raises(ValueError):
+        error_frame("made_up_code")
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.binary(max_size=2 * HEADER_SIZE + 64))
+def test_decode_frame_total_on_arbitrary_bytes(blob):
+    """Property: decode_frame is total over arbitrary byte strings —
+    typed WireError or a well-formed (dict, consumed) result."""
+    try:
+        frame, used = decode_frame(blob)
+    except WireError:
+        return
+    assert isinstance(frame, dict) and isinstance(frame.get("type"), str)
+    assert HEADER_SIZE <= used <= len(blob)
+
+
+# ----------------------------------------------------------------------
+# server-side conformance (live socket, bounded reads)
+# ----------------------------------------------------------------------
+@pytest.fixture
+def live_server(tmp_path):
+    profile = AppProfile.from_wcg_times(
+        random_wcg(10, rng=np.random.default_rng(0))
+    )
+    broker = OffloadBroker(backend="reference", clock=lambda: 0.0)
+    broker.register("app", profile, ResponseTimeModel())
+    server = SolverServer(
+        broker,
+        address=unix_address(tmp_path / "srv.sock"),
+        journal_path=tmp_path / "journal.jsonl",
+        snapshot_dir=tmp_path / "snaps",
+    )
+    server.bind()
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    yield server, profile
+    server.stop()
+    thread.join(timeout=10)
+
+
+def _raw(server) -> FrameStream:
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.settimeout(TIMEOUT)
+    sock.connect(server.address[1])
+    return FrameStream(sock)
+
+
+def _hello(stream, **overrides) -> dict:
+    hello = {"type": "hello", "version": PROTOCOL_VERSION,
+             "encoding": "json", "client": "conformance"}
+    hello.update(overrides)
+    stream.send(hello)
+    return stream.recv(TIMEOUT)
+
+
+def test_version_mismatch_hello_gets_typed_error_and_close(live_server):
+    server, _ = live_server
+    stream = _raw(server)
+    reply = _hello(stream, version=PROTOCOL_VERSION + 13)
+    assert reply["type"] == "error"
+    assert reply["code"] == "version_mismatch"
+    assert reply["server_version"] == PROTOCOL_VERSION
+    assert stream.recv(TIMEOUT) is None  # clean disconnect
+    stream.close()
+
+
+def test_first_frame_must_be_hello(live_server):
+    server, _ = live_server
+    stream = _raw(server)
+    stream.send({"type": "ping"})
+    reply = stream.recv(TIMEOUT)
+    assert reply["type"] == "error" and reply["code"] == "not_ready"
+    assert stream.recv(TIMEOUT) is None
+    stream.close()
+
+
+def test_garbage_bytes_get_error_frame_then_disconnect(live_server):
+    server, _ = live_server
+    stream = _raw(server)
+    assert _hello(stream)["type"] == "hello_ok"
+    stream.sock.sendall(b"\xff" * 64)  # nonsense header: huge length
+    reply = stream.recv(TIMEOUT)
+    assert reply["type"] == "error" and reply["code"] in ("bad_frame",
+                                                          "too_large")
+    assert stream.recv(TIMEOUT) is None
+    stream.close()
+
+
+def test_oversized_frame_is_refused_without_buffering(live_server):
+    server, _ = live_server
+    stream = _raw(server)
+    assert _hello(stream)["type"] == "hello_ok"
+    stream.sock.sendall(struct.pack("!IB", DEFAULT_MAX_FRAME + 1, 0))
+    reply = stream.recv(TIMEOUT)
+    assert reply["type"] == "error" and reply["code"] == "too_large"
+    assert stream.recv(TIMEOUT) is None
+    stream.close()
+
+
+def test_content_errors_keep_the_connection_open(live_server):
+    server, _ = live_server
+    stream = _raw(server)
+    assert _hello(stream)["type"] == "hello_ok"
+    # unknown frame type
+    stream.send({"type": "frobnicate"})
+    reply = stream.recv(TIMEOUT)
+    assert reply["type"] == "error" and reply["code"] == "unknown_type"
+    # unknown tenant
+    stream.send({"type": "submit", "id": "q-1", "tenant": "ghost",
+                 "env": env_to_wire(Environment.symmetric(2.0, 3.0))})
+    reply = stream.recv(TIMEOUT)
+    assert reply["type"] == "error" and reply["code"] == "unknown_tenant"
+    # malformed submit (no id)
+    stream.send({"type": "submit", "tenant": "app"})
+    reply = stream.recv(TIMEOUT)
+    assert reply["type"] == "error" and reply["code"] == "bad_frame"
+    # ...and the stream still serves: ping works
+    stream.send({"type": "ping", "nonce": "still-alive"})
+    reply = stream.recv(TIMEOUT)
+    assert reply["type"] == "pong" and reply["nonce"] == "still-alive"
+    stream.send({"type": "bye"})
+    assert stream.recv(TIMEOUT) is None
+    stream.close()
+
+
+def test_fuzz_storm_never_wedges_the_server(live_server):
+    """Seeded garbage blasted over N connections, then a clean client:
+    the reactor must still serve real work afterwards."""
+    server, profile = live_server
+    rng = np.random.default_rng(7)
+    for _ in range(8):
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.settimeout(TIMEOUT)
+        sock.connect(server.address[1])
+        try:
+            sock.sendall(rng.bytes(int(rng.integers(1, 512))))
+        except OSError:
+            pass
+        sock.close()
+    client = BrokerClient(
+        unix_address(server.address[1]),
+        tenants={"app": (profile, ResponseTimeModel())},
+        client="post-fuzz", timeout=TIMEOUT,
+    )
+    client.connect()
+    fut = client.submit("app", Environment.symmetric(2.0, 3.0))
+    client.tick()
+    assert fut.done and fut.result.result is not None
+    client.close()
+
+
+def test_no_unresolved_futures_after_drain(live_server):
+    """Every submitted future resolves within a bounded number of ticks
+    — the 'never an unresolved future' clause, deadline-bounded."""
+    server, profile = live_server
+    client = BrokerClient(
+        unix_address(server.address[1]),
+        tenants={"app": (profile, ResponseTimeModel())},
+        client="drainer", timeout=TIMEOUT,
+    )
+    client.connect()
+    futures = [
+        client.submit("app", Environment.symmetric(bw, 3.0), deadline=4)
+        for bw in (8.0, 1.2, 0.3, 8.0, 1.2)
+    ]
+    client.drain(max_ticks=16)
+    assert client.unresolved == 0
+    assert all(f.done for f in futures)
+    client.close()
+
+
+def test_hello_negotiates_encoding_and_lists_tenants(live_server):
+    server, _ = live_server
+    stream = _raw(server)
+    ok = _hello(stream, encoding="msgpack")
+    assert ok["type"] == "hello_ok"
+    assert ok["encoding"] in supported_encodings()
+    assert ok["tenants"] == ["app"]
+    assert ok["version"] == PROTOCOL_VERSION
+    stream.send({"type": "bye"})
+    stream.close()
+
+
+def test_client_rejects_version_mismatch(live_server, monkeypatch):
+    server, profile = live_server
+    import repro.service.client as client_mod
+
+    monkeypatch.setattr(client_mod, "PROTOCOL_VERSION", PROTOCOL_VERSION + 1)
+    client = BrokerClient(
+        unix_address(server.address[1]),
+        tenants={"app": (profile, ResponseTimeModel())},
+        timeout=TIMEOUT,
+    )
+    with pytest.raises(VersionMismatch):
+        client.connect()

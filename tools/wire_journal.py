@@ -1,0 +1,193 @@
+#!/usr/bin/env python
+"""Offline inspector for the solver's write-ahead request journal.
+
+    PYTHONPATH=src python tools/wire_journal.py JOURNAL.jsonl [options]
+
+Reads the JSONL journal a :class:`repro.service.server.SolverServer`
+appends (one ``submit``/``tick`` entry per accepted frame, write-ahead
+of the ack) and answers the questions an operator asks after a crash:
+
+* default           summary: seq range, submits per tenant/lane, ticks
+                    covered, truncated-tail detection.
+* ``--snapshot-dir DIR``
+                    cross-check against the cache snapshots: which seq
+                    each tenant's snapshot covers and how many journal
+                    entries a warm restart would replay.
+* ``--tail N``      the last N entries, pretty-printed.
+* ``--verify``      CI gate: exit non-zero if the journal is not
+                    replayable — non-monotonic seq, a submit entry
+                    missing id/tenant/env, or a snapshot that claims a
+                    seq newer than the journal's head.
+* ``--json``        machine-readable summary document instead of text.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from collections import Counter
+
+
+def load_entries(path: pathlib.Path) -> tuple[list[dict], int]:
+    """Parse a journal; returns (entries, undecodable_line_count).
+
+    Undecodable lines — the tail a SIGKILL mid-append leaves — are
+    counted, not fatal: each journal line stands alone.
+    """
+    entries: list[dict] = []
+    bad = 0
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            doc = json.loads(line)
+        except json.JSONDecodeError:
+            bad += 1
+            continue
+        if isinstance(doc, dict) and isinstance(doc.get("seq"), int):
+            entries.append(doc)
+        else:
+            bad += 1
+    return entries, bad
+
+
+def summarize(entries: list[dict], bad: int) -> dict:
+    submits = [e for e in entries if e.get("op") == "submit"]
+    ticks = [e for e in entries if e.get("op") == "tick"]
+    seqs = [e["seq"] for e in entries if e.get("op") != "journal"]
+    monotonic = all(a < b for a, b in zip(seqs, seqs[1:]))
+    malformed_submits = [
+        e["seq"]
+        for e in submits
+        if not (isinstance(e.get("id"), str) and e.get("tenant")
+                and isinstance(e.get("env"), dict))
+    ]
+    return {
+        "entries": len(entries),
+        "undecodable_lines": bad,
+        "seq_first": seqs[0] if seqs else 0,
+        "seq_last": seqs[-1] if seqs else 0,
+        "seq_monotonic": monotonic,
+        "submits": len(submits),
+        "submits_by_tenant": dict(Counter(e.get("tenant") for e in submits)),
+        "submits_by_lane": dict(
+            Counter(e.get("lane", "user") for e in submits)
+        ),
+        "ticks": len(ticks),
+        "tick_first": ticks[0].get("tick") if ticks else None,
+        "tick_last": ticks[-1].get("tick") if ticks else None,
+        "malformed_submits": malformed_submits,
+    }
+
+
+def snapshot_coverage(snapshot_dir: pathlib.Path,
+                      summary: dict) -> list[dict]:
+    """Per-tenant snapshot meta vs the journal head: the replay window."""
+    out = []
+    for path in sorted(snapshot_dir.glob("*.snapshot.json")):
+        tenant = path.name[: -len(".snapshot.json")]
+        try:
+            doc = json.loads(path.read_text())
+            meta = doc.get("meta") or {}
+            covered = int(meta.get("journal_seq", 0))
+            tick = int(meta.get("tick", 0))
+            entries = len(doc.get("entries", ()))
+        except (OSError, json.JSONDecodeError, TypeError, ValueError):
+            covered, tick, entries = 0, 0, 0
+        out.append(
+            {
+                "tenant": tenant,
+                "cache_entries": entries,
+                "covered_seq": covered,
+                "covered_tick": tick,
+                "replay_window": max(summary["seq_last"] - covered, 0),
+                "ahead_of_journal": covered > summary["seq_last"],
+            }
+        )
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("journal", type=pathlib.Path)
+    ap.add_argument("--snapshot-dir", type=pathlib.Path)
+    ap.add_argument("--tail", type=int, metavar="N")
+    ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    args = ap.parse_args(argv)
+
+    if not args.journal.exists():
+        print(f"error: no journal at {args.journal}", file=sys.stderr)
+        return 2
+    entries, bad = load_entries(args.journal)
+    summary = summarize(entries, bad)
+    snapshots = (
+        snapshot_coverage(args.snapshot_dir, summary)
+        if args.snapshot_dir
+        else None
+    )
+
+    if args.as_json:
+        doc = {"journal": str(args.journal), "summary": summary}
+        if snapshots is not None:
+            doc["snapshots"] = snapshots
+        if args.tail:
+            doc["tail"] = entries[-args.tail:]
+        print(json.dumps(doc, indent=2))
+    else:
+        s = summary
+        print(f"journal {args.journal}")
+        print(
+            f"  {s['entries']} entries (seq {s['seq_first']}..{s['seq_last']}"
+            f", monotonic={s['seq_monotonic']}), "
+            f"{s['undecodable_lines']} undecodable line(s)"
+        )
+        print(
+            f"  {s['submits']} submits "
+            f"by tenant {s['submits_by_tenant']} lanes {s['submits_by_lane']}"
+        )
+        print(
+            f"  {s['ticks']} ticks "
+            f"({s['tick_first']}..{s['tick_last']})"
+        )
+        for snap in snapshots or ():
+            state = "AHEAD OF JOURNAL" if snap["ahead_of_journal"] else (
+                f"replay window {snap['replay_window']} entr(ies)"
+            )
+            print(
+                f"  snapshot {snap['tenant']}: {snap['cache_entries']} cache "
+                f"entries, covers seq {snap['covered_seq']} "
+                f"tick {snap['covered_tick']} — {state}"
+            )
+        for e in entries[-args.tail:] if args.tail else ():
+            print(f"  {json.dumps(e, separators=(',', ':'))}")
+
+    if args.verify:
+        problems = []
+        if not summary["seq_monotonic"]:
+            problems.append("sequence numbers are not strictly increasing")
+        if summary["malformed_submits"]:
+            problems.append(
+                f"malformed submit entries at seq "
+                f"{summary['malformed_submits']}"
+            )
+        for snap in snapshots or ():
+            if snap["ahead_of_journal"]:
+                problems.append(
+                    f"snapshot {snap['tenant']} covers seq "
+                    f"{snap['covered_seq']} past journal head "
+                    f"{summary['seq_last']}"
+                )
+        if problems:
+            for p in problems:
+                print(f"VERIFY FAIL: {p}", file=sys.stderr)
+            return 1
+        print("verify: journal replayable")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
